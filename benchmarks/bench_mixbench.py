@@ -1,0 +1,36 @@
+"""mixbench analogue (paper Figs. 6-8 bottom row): arithmetic-intensity sweep.
+
+Measures GFLOP/s of y = poly_k(x) kernels with k fused multiply-adds per
+element — as k grows the kernel crosses from bandwidth-bound to compute-bound,
+tracing the machine's roofline knee (the paper uses mixbench to place each
+GPU's knee; the SpMV/solver fractions are then read against the flat part).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+
+
+def run(n: int = 1 << 22) -> None:
+    x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+    for k in (1, 2, 4, 8, 16, 32, 64):
+        def kernel(x, k=k):
+            acc = x
+            for i in range(k):
+                acc = acc * 1.000001 + 0.5  # k FMAs per element
+            return acc
+
+        fn = jax.jit(kernel)
+        t = time_fn(fn, x)
+        flops = 2 * k * n / t
+        bw = 2 * n * 4 / t
+        emit(f"mixbench_fma{k}", t * 1e6,
+             f"{flops/1e9:.2f}GFLOP/s_{bw/1e9:.2f}GB/s_ai{k/4:.2f}")
+
+
+if __name__ == "__main__":
+    run()

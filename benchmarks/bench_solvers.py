@@ -1,0 +1,71 @@
+"""Krylov solver survey (paper Figs. 12-14): GFLOP/s vs the ai=1 bound.
+
+The paper runs each solver 10k iterations on 10 matrices and reports
+GFLOP/s against the aggressive arithmetic-intensity-1 bound (BW / bytes-per-
+value: f64 -> BW/8; here f32 -> BW/4).  We run a fixed iteration budget
+(restart-free stopping disabled) and count flops structurally:
+
+    per CG iteration: 1 SpMV (2 nnz) + 3 axpy (2n) + 2 dots (2n) + norm (2n)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, spd_suite, time_fn
+from repro import solvers, sparse
+from repro.core import XlaExecutor, use_executor
+
+ITERS = 200
+
+
+def flops_per_iter(kind: str, nnz: int, n: int) -> float:
+    spmv = 2 * nnz
+    axpy = 2 * n
+    dot = 2 * n
+    if kind == "cg":
+        return spmv + 3 * axpy + 3 * dot
+    if kind == "fcg":
+        return spmv + 3 * axpy + 4 * dot
+    if kind == "bicgstab":
+        return 2 * spmv + 6 * axpy + 5 * dot
+    if kind == "cgs":
+        return 2 * spmv + 7 * axpy + 2 * dot
+    if kind == "gmres":  # per inner iteration, restart 30 amortized
+        return spmv + 30 * dot + 31 * axpy
+    raise KeyError(kind)
+
+
+def run(bandwidth: float, small: bool = False) -> None:
+    bound = bandwidth / 4 / 1e9  # f32 ai=1 bound, GFLOP/s
+    suite = spd_suite(small)
+    stop = solvers.Stop(max_iters=ITERS, reduction_factor=0.0)  # fixed budget
+    with use_executor(XlaExecutor()):
+        for mat_name, a in suite.items():
+            n = a.shape[0]
+            nnz = int((a != 0).sum())
+            A = sparse.csr_from_dense(a)
+            b = jnp.asarray(np.ones(n, np.float32))
+            for kind, fn in (
+                ("cg", solvers.cg),
+                ("fcg", solvers.fcg),
+                ("bicgstab", solvers.bicgstab),
+                ("cgs", solvers.cgs),
+            ):
+                solve = jax.jit(lambda b, fn=fn: fn(A, b, stop=stop).x)
+                t = time_fn(solve, b, warmup=1, repeats=3)
+                gflops = ITERS * flops_per_iter(kind, nnz, n) / t / 1e9
+                emit(
+                    f"solver_{kind}_{mat_name}",
+                    t * 1e6,
+                    f"{gflops:.3f}GFLOP/s_frac{gflops/bound:.2f}",
+                )
+
+
+if __name__ == "__main__":
+    from benchmarks.bench_stream import run as stream_run
+
+    bw = stream_run(sizes=(1 << 22,))
+    run(bw, small=True)

@@ -1,0 +1,63 @@
+"""SpMV survey (paper Figs. 9-11): formats x matrix suite x executors.
+
+Reports GFLOP/s (2*nnz / t) and the fraction of the bandwidth-induced bound —
+the paper's performance-portability metric.  Bound per format (f32):
+
+    bytes/nnz: value 4 + column index 4 (+ row structure, amortized)
+    CSR/ELL ~ 8 B per 2 flops -> bound = BW/4
+    COO     ~ 12 B per 2 flops -> bound = BW/6
+    SELL-P  ~ 8 B per 2 flops on stored (padded) entries
+
+(The paper's f64 constants are BW/6 and BW/8; f32 halves the value bytes.)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, matrix_suite, time_fn
+from repro import sparse
+from repro.core import PallasInterpretExecutor, XlaExecutor, use_executor
+
+BOUND_DIVISOR = {"coo": 6.0, "csr": 4.0, "ell": 4.0, "sellp": 4.0}
+
+
+def run(bandwidth: float, small: bool = False, pallas: bool = False) -> None:
+    suite = matrix_suite(small)
+    rng = np.random.default_rng(7)
+    execs = [("xla", XlaExecutor())]
+    if pallas:
+        # interpret-mode timing is NOT indicative of TPU perf; included only
+        # to exercise the path (off by default)
+        execs.append(("pallas_interp", PallasInterpretExecutor()))
+
+    for mat_name, a in suite.items():
+        nnz = int((a != 0).sum())
+        x = jnp.asarray(rng.normal(size=(a.shape[1],)).astype(np.float32))
+        mats = {
+            "coo": sparse.coo_from_dense(a),
+            "csr": sparse.csr_from_dense(a),
+            "ell": sparse.ell_from_dense(a),
+            "sellp": sparse.sellp_from_dense(a),
+        }
+        for ex_name, ex in execs:
+            with use_executor(ex):
+                for fmt, A in mats.items():
+                    fn = jax.jit(lambda x, A=A: sparse.apply(A, x))
+                    t = time_fn(fn, x)
+                    gflops = 2 * nnz / t / 1e9
+                    bound = bandwidth / BOUND_DIVISOR[fmt] / 1e9
+                    emit(
+                        f"spmv_{ex_name}_{fmt}_{mat_name}",
+                        t * 1e6,
+                        f"{gflops:.3f}GFLOP/s_frac{gflops/bound:.2f}",
+                    )
+
+
+if __name__ == "__main__":
+    from benchmarks.bench_stream import run as stream_run
+
+    bw = stream_run(sizes=(1 << 22,))
+    run(bw, small=True)

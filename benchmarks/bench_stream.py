@@ -1,0 +1,48 @@
+"""BabelStream/mixbench analogue (paper Figs. 6-8): measured machine bandwidth.
+
+On the target TPU v5e the constants are known (819 GB/s HBM); on this CPU
+container we MEASURE the attainable bandwidth, which the SpMV/solver
+benchmarks then use as their roofline denominator — the same relative
+methodology as the paper (kernel GFLOP/s vs stream-measured bound).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+
+
+def run(sizes=(1 << 20, 1 << 22, 1 << 24)) -> float:
+    """Returns the peak measured triad bandwidth (bytes/s)."""
+    best = 0.0
+    for n in sizes:
+        a = jnp.arange(n, dtype=jnp.float32)
+        b = jnp.ones(n, jnp.float32) * 2.0
+        c = jnp.ones(n, jnp.float32) * 0.5
+
+        copy = jax.jit(lambda a: a * 1.0)
+        mul = jax.jit(lambda a: a * 3.0)
+        add = jax.jit(lambda a, b: a + b)
+        triad = jax.jit(lambda b, c: b + 1.5 * c)
+        dot = jax.jit(lambda a, b: jnp.vdot(a, b))
+
+        mb = n * 4 / 1e6
+        for name, fn, args, streams in (
+            ("copy", copy, (a,), 2),
+            ("mul", mul, (a,), 2),
+            ("add", add, (a, b), 3),
+            ("triad", triad, (b, c), 3),
+            ("dot", dot, (a, b), 2),
+        ):
+            t = time_fn(fn, *args)
+            bw = streams * n * 4 / t
+            best = max(best, bw)
+            emit(f"stream_{name}_{mb:.0f}MB", t * 1e6, f"{bw/1e9:.2f}GB/s")
+    return best
+
+
+if __name__ == "__main__":
+    run()

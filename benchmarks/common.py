@@ -1,0 +1,140 @@
+"""Benchmark utilities: timing, synthetic matrix suite, CSV emission.
+
+The paper benchmarks 100 SuiteSparse matrices; this container is offline, so
+the suite below generates seeded synthetic matrices spanning the same regimes
+(stencils, banded, random, power-law rows, blocked) — the axis that matters
+for format behaviour is the row-length distribution, which these cover.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, repeats: int = 5) -> float:
+    """Median wall seconds per call (blocking on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+# -- synthetic matrix suite -----------------------------------------------------------
+
+def stencil_2d(n_side: int) -> np.ndarray:
+    n = n_side * n_side
+    a = np.zeros((n, n), np.float32)
+    for i in range(n_side):
+        for j in range(n_side):
+            r = i * n_side + j
+            a[r, r] = 4.0
+            if i > 0:
+                a[r, r - n_side] = -1.0
+            if i < n_side - 1:
+                a[r, r + n_side] = -1.0
+            if j > 0:
+                a[r, r - 1] = -1.0
+            if j < n_side - 1:
+                a[r, r + 1] = -1.0
+    return a
+
+
+def tridiag(n: int) -> np.ndarray:
+    a = np.zeros((n, n), np.float32)
+    idx = np.arange(n)
+    a[idx, idx] = 2.0
+    a[idx[1:], idx[:-1]] = -1.0
+    a[idx[:-1], idx[1:]] = -1.0
+    return a
+
+
+def banded(n: int, bands=(0, 1, 2, 5, 9), rng=None) -> np.ndarray:
+    rng = rng or np.random.default_rng(0)
+    a = np.zeros((n, n), np.float32)
+    for b in bands:
+        v = rng.normal(size=n - b).astype(np.float32)
+        a[np.arange(n - b), np.arange(b, n)] = v
+        a[np.arange(b, n), np.arange(n - b)] = v
+    a[np.arange(n), np.arange(n)] += 10.0
+    return a
+
+
+def random_uniform(n: int, density: float, rng=None) -> np.ndarray:
+    rng = rng or np.random.default_rng(1)
+    a = rng.normal(size=(n, n)).astype(np.float32)
+    a[rng.random((n, n)) >= density] = 0.0
+    return a
+
+
+def power_law_rows(n: int, rng=None) -> np.ndarray:
+    """Few very heavy rows, many light ones — the ELL worst case."""
+    rng = rng or np.random.default_rng(2)
+    a = np.zeros((n, n), np.float32)
+    row_nnz = np.minimum((rng.pareto(1.2, size=n) + 1).astype(int) * 2, n // 2)
+    for i in range(n):
+        cols = rng.choice(n, size=row_nnz[i], replace=False)
+        a[i, cols] = rng.normal(size=row_nnz[i])
+    return a
+
+
+def block_diag(n: int, bs: int, rng=None) -> np.ndarray:
+    rng = rng or np.random.default_rng(3)
+    a = np.zeros((n, n), np.float32)
+    for s in range(0, n, bs):
+        e = min(s + bs, n)
+        a[s:e, s:e] = rng.normal(size=(e - s, e - s))
+    return a
+
+
+def arrow(n: int, rng=None) -> np.ndarray:
+    rng = rng or np.random.default_rng(4)
+    a = np.zeros((n, n), np.float32)
+    a[np.arange(n), np.arange(n)] = 4.0
+    a[0, :] = rng.normal(size=n) * 0.1
+    a[:, 0] = rng.normal(size=n) * 0.1
+    return a
+
+
+def matrix_suite(small: bool = False) -> Dict[str, np.ndarray]:
+    """The SpMV survey suite (paper Figs. 9-11 analogue)."""
+    k = 0.5 if small else 1.0
+    n1, n2 = int(2048 * k), int(4096 * k)
+    return {
+        "stencil2d_32": stencil_2d(32),
+        "stencil2d_48": stencil_2d(48),
+        "tridiag_4k": tridiag(n2),
+        "banded_2k": banded(n1),
+        "rand0.2%_4k": random_uniform(n2, 0.002),
+        "rand1%_2k": random_uniform(n1, 0.01),
+        "rand5%_1k": random_uniform(1024, 0.05),
+        "powerlaw_2k": power_law_rows(n1),
+        "blockdiag_2k": block_diag(n1, 16),
+        "arrow_2k": arrow(n1),
+    }
+
+
+def spd_suite(small: bool = False) -> Dict[str, np.ndarray]:
+    """Solver suite (paper Figs. 12-14 analogue): 10 SPD systems."""
+    mats = {}
+    base = matrix_suite(small)
+    for name in ("stencil2d_32", "stencil2d_48", "tridiag_4k", "banded_2k"):
+        mats[name] = base[name]
+    rng = np.random.default_rng(9)
+    for i, n in enumerate((512, 768, 1024, 1536, 2048, 3072)):
+        a = random_uniform(n, min(0.01 * (i + 1), 0.05), rng).astype(np.float32)
+        a = (a + a.T) / 2
+        a[np.arange(n), np.arange(n)] = np.abs(a).sum(1) + 1.0  # diag dominant
+        mats[f"spd_rand_{n}"] = a
+    return mats

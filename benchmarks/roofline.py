@@ -1,0 +1,95 @@
+"""Roofline table generator: reads experiments/dryrun/*.json (written by
+``python -m repro.launch.dryrun``) and emits the §Roofline table for
+EXPERIMENTS.md — per (arch x shape x mesh): the three terms, the bottleneck,
+and MODEL_FLOPS/HLO_FLOPS (useful fraction)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_cells(pattern: str = "*.json") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.2f}"
+
+
+def advice(c: Dict) -> str:
+    """One sentence: what moves this cell's dominant term down (assignment g)."""
+    b = c["roofline"]["bottleneck"]
+    arch, shape = c["arch"], c["shape"]
+    moe = arch.startswith(("qwen2", "olmoe"))
+    ssm = arch.startswith(("rwkv6", "zamba2"))
+    if b == "collective":
+        if ssm and "decode" in shape or shape == "long_500k":
+            return ("state all-gathers from non-divisible head counts: pad heads "
+                    "to the model axis or replicate state per column")
+        if moe:
+            return "a2a expert dispatch + FSDP (measured -40% in §Perf cell B)"
+        return "overlap grad all-reduce with bwd compute (ring matmul / async)"
+    if b == "memory":
+        if shape in ("prefill_32k", "train_4k") and not ssm:
+            return ("flash kernel contract removes the S x Skv score traffic "
+                    "(175x on minicpm3 prefill, §Perf cell C)")
+        if "decode" in shape:
+            return ("cache reads are the floor: quantize KV to int8 or shrink "
+                    "kv heads/latents (MLA already 18x smaller than GQA here)"
+                    if arch != "minicpm3_4b" else
+                    "latent cache already minimal; batch more requests per step")
+        if ssm:
+            return ("chunked-scan carries dominate: fuse the chunk pipeline in "
+                    "the Pallas kernel (state stays in VMEM across chunks)")
+        return "dots-remat policy + flash-VJP kernel cut recompute traffic"
+    return ("compute-bound: raise MXU utilization (bf16 tiles aligned, larger "
+            "per-chip batch) or accept — this is the roofline")
+
+
+def table(cells: List[Dict], markdown: bool = True) -> str:
+    rows = []
+    header = (
+        "| arch | shape | mesh | compute ms | memory ms | collective ms | "
+        "bottleneck | useful frac | peak GiB/dev | to move the dominant term |"
+    )
+    sep = "|" + "---|" * 10
+    for c in cells:
+        r = c["roofline"]
+        mf = c["model_flops"]
+        peak = c["memory_analysis"].get("peak_bytes")
+        peak_s = f"{peak/2**30:.2f}" if peak else "-"
+        uf = mf.get("useful_fraction")
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+            f"{fmt_ms(r['compute_s'])} | {fmt_ms(r['memory_s'])} | "
+            f"{fmt_ms(r['collective_s'])} | {r['bottleneck']} | "
+            f"{uf:.3f} | {peak_s} | {advice(c)} |"
+        )
+    return "\n".join([header, sep] + rows)
+
+
+def csv(cells: List[Dict]) -> None:
+    for c in cells:
+        r = c["roofline"]
+        name = f"roofline_{c['arch']}_{c['shape']}_{c['mesh']}"
+        total = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / total if total else 0.0
+        print(
+            f"{name},{total*1e6:.1f},"
+            f"bottleneck={r['bottleneck']}_computefrac{frac:.2f}"
+            f"_useful{c['model_flops']['useful_fraction']:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(table(cells))

@@ -1,0 +1,60 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV lines:
+
+  Fig. 3   -> bench_coop      (portable cooperative groups vs native)
+  Figs 6-8 -> bench_stream    (machine bandwidth; roofline denominator)
+  Figs 9-11-> bench_spmv      (SpMV survey: formats x matrices, frac-of-bound)
+  Figs12-14-> bench_solvers   (Krylov solvers, frac-of-ai=1-bound)
+  Roofline -> roofline        (LM cells from the dry-run artifacts, if present)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-size matrices (slower; default: small suite)")
+    args = ap.parse_args()
+    small = not args.full
+
+    from benchmarks import bench_coop, bench_solvers, bench_spmv, bench_stream
+
+    print("# coop groups (paper Fig. 3)")
+    bench_coop.run()
+
+    print("# mixbench arithmetic-intensity sweep (paper Figs. 6-8, bottom)")
+    from benchmarks import bench_mixbench
+
+    bench_mixbench.run()
+
+    print("# stream bandwidth (paper Figs. 6-8)")
+    bw = bench_stream.run(
+        sizes=(1 << 22, 1 << 24) if small else (1 << 22, 1 << 24, 1 << 26)
+    )
+
+    print(f"# spmv survey (paper Figs. 9-11), bound from measured {bw/1e9:.1f} GB/s")
+    bench_spmv.run(bw, small=small)
+
+    print("# krylov solvers (paper Figs. 12-14)")
+    bench_solvers.run(bw, small=small)
+
+    # LM roofline cells (only if the dry-run artifacts exist)
+    try:
+        from benchmarks import roofline
+
+        cells = roofline.load_cells()
+        if cells:
+            print("# LM roofline cells (from dry-run artifacts)")
+            roofline.csv(cells)
+    except Exception as e:  # noqa: BLE001
+        print(f"# roofline cells unavailable: {e}")
+
+
+if __name__ == "__main__":
+    main()

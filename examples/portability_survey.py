@@ -1,0 +1,55 @@
+"""Portability survey (paper §6 analogue): run the SpMV format suite on every
+executor and report the fraction of the bandwidth bound each achieves — the
+paper's performance-portability metric, reproduced end-to-end.
+
+Run: PYTHONPATH=src python examples/portability_survey.py
+"""
+
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.bench_stream import run as stream_run
+from benchmarks.common import matrix_suite, time_fn
+from repro import sparse
+from repro.core import ReferenceExecutor, XlaExecutor, use_executor
+
+BOUND_DIVISOR = {"coo": 6.0, "csr": 4.0, "ell": 4.0, "sellp": 4.0}
+
+
+def main():
+    print("measuring machine bandwidth (stream)...")
+    bw = stream_run(sizes=(1 << 22,))
+    print(f"peak measured bandwidth: {bw/1e9:.2f} GB/s\n")
+
+    suite = {k: v for k, v in list(matrix_suite(small=True).items())[:5]}
+    rng = np.random.default_rng(0)
+    print(f"{'matrix':14s} {'format':7s} {'executor':10s} "
+          f"{'GFLOP/s':>9s} {'frac-of-bound':>14s}")
+    for mat_name, a in suite.items():
+        nnz = int((a != 0).sum())
+        x = jnp.asarray(rng.normal(size=(a.shape[1],)).astype(np.float32))
+        for fmt, build in (
+            ("csr", sparse.csr_from_dense),
+            ("ell", sparse.ell_from_dense),
+            ("sellp", sparse.sellp_from_dense),
+        ):
+            A = build(a)
+            for ex_name, ex in (("reference", ReferenceExecutor()),
+                                ("xla", XlaExecutor())):
+                with use_executor(ex):
+                    fn = jax.jit(lambda x, A=A: sparse.apply(A, x))
+                    t = time_fn(fn, x, warmup=1, repeats=3)
+                gflops = 2 * nnz / t / 1e9
+                bound = bw / BOUND_DIVISOR[fmt] / 1e9
+                print(f"{mat_name:14s} {fmt:7s} {ex_name:10s} "
+                      f"{gflops:9.3f} {gflops/bound:14.2f}")
+
+
+if __name__ == "__main__":
+    main()

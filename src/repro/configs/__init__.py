@@ -1,0 +1,23 @@
+"""repro.configs — one module per assigned architecture + shape definitions."""
+
+from repro.configs.base import (
+    ARCH_ALIASES,
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    cells,
+    get_config,
+    get_smoke_config,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "ARCH_ALIASES",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "cells",
+    "get_config",
+    "get_smoke_config",
+]

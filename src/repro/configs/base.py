@@ -1,0 +1,160 @@
+"""Model / shape configuration system.
+
+One :class:`ModelConfig` dataclass covers every assigned architecture family
+(dense / MoE / MLA / SSM / hybrid / stub-frontend backbones); each
+``src/repro/configs/<arch>.py`` exports ``config()`` (the exact published
+configuration) and ``smoke_config()`` (a reduced same-family configuration for
+CPU tests).  Input shapes are the four assigned (seq_len, global_batch) cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+ARCH_IDS = (
+    "qwen2_moe_a2_7b",
+    "olmoe_1b_7b",
+    "granite_8b",
+    "minicpm3_4b",
+    "smollm_135m",
+    "yi_9b",
+    "rwkv6_3b",
+    "musicgen_large",
+    "zamba2_2_7b",
+    "pixtral_12b",
+)
+
+# assignment ids (with dashes/dots, e.g. "zamba2-2.7b") -> module names
+def _normalize(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+ARCH_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # "dense" | "moe" | "mla" | "rwkv6" | "hybrid"
+    n_layers: int
+    d_model: int
+    vocab: int
+    # attention
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    rope_theta: float = 10000.0
+    pos_kind: str = "rope"  # "rope" | "sinusoidal" (musicgen)
+    # mlp
+    d_ff: int = 0
+    mlp_kind: str = "swiglu"  # "swiglu" | "gelu"
+    norm_kind: str = "rmsnorm"  # "rmsnorm" | "layernorm"
+    norm_eps: float = 1e-6
+    # embeddings / head
+    tie_embeddings: bool = False
+    emb_scale: float = 1.0  # minicpm3 scale_emb
+    logit_scale: float = 1.0  # minicpm3 d_model / dim_model_base
+    residual_scale: float = 1.0  # minicpm3 scale_depth / sqrt(n_layers)
+    # frontends ([audio]/[vlm]: stub embeddings replace the token embedding)
+    frontend: str = "tokens"  # "tokens" | "stub_embeddings"
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_expert: int = 0
+    n_experts_padded: int = 0  # 0 = no padding; qwen2: 64 for EP over 16
+    shared_expert_ff: int = 0  # total shared-expert hidden (qwen2: 4 x 1408)
+    router_aux_weight: float = 0.01
+    # expert-parallel dispatch spec: (batch_mesh_axes, expert_mesh_axis),
+    # e.g. (("pod","data"), "model"); () = single-device sort dispatch.
+    moe_spec: tuple = ()
+    moe_capacity_factor: float = 1.25
+    # "gather": tokens model-replicated, experts read their copy, psum combine.
+    # "a2a":    tokens seq-sharded over the model axis, all_to_all dispatch +
+    #           return (no activation all-gather, no output psum) — the
+    #           collective-bound §Perf optimization.
+    moe_dispatch: str = "gather"
+    # MLA (minicpm3)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    # SSM (mamba2 / rwkv6)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    rwkv_head_dim: int = 64
+    # hybrid (zamba2)
+    shared_attn_every: int = 6
+    lora_rank: int = 128
+    # numerics / impl selection (xla-space attention variant; pallas executor
+    # always uses the flash kernel)
+    dtype: str = "float32"
+    attn_impl: str = "dense"  # "dense" | "chunked"
+    attn_chunk: int = 512
+    # sequence-parallel activation sharding between blocks: a 2-tuple
+    # (batch_mesh_axes, seq_mesh_axis), e.g. (("pod","data"), "model");
+    # () disables (single-device tests).  Set by the launcher per mesh.
+    sp_spec: tuple = ()
+    remat: str = "none"  # "none" | "block" — activation checkpointing policy
+    scan_layers: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "rwkv6"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence mixing (SSM / hybrid) — gates long_500k."""
+        return self.family in ("rwkv6", "hybrid")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = _normalize(ARCH_ALIASES.get(arch, arch))
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCH_IDS)}")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    arch = _normalize(ARCH_ALIASES.get(arch, arch))
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCH_IDS)}")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.smoke_config()
+
+
+def cells(arch: str) -> Tuple[str, ...]:
+    """The live (arch x shape) cells: long_500k only for sub-quadratic archs."""
+    cfg = get_config(arch)
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_context:
+        names.append("long_500k")
+    return tuple(names)

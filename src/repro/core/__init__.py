@@ -1,0 +1,69 @@
+"""repro.core — the paper's contribution: executor-based platform portability.
+
+Public surface:
+
+* :mod:`repro.core.executor` — the Executor hierarchy (Reference / Xla /
+  PallasTpu / PallasInterpret) and the ambient-executor context.
+* :mod:`repro.core.registry` — operation registration and dynamic dispatch
+  (``GKO_REGISTER_OPERATION`` analogue).
+* :mod:`repro.core.coop` — cooperative groups on TPU lane tiles.
+* :mod:`repro.core.params` — per-target hardware parameter tables.
+"""
+
+from repro.core.executor import (
+    Executor,
+    PallasInterpretExecutor,
+    PallasTpuExecutor,
+    ReferenceExecutor,
+    XlaExecutor,
+    current_executor,
+    default_executor,
+    make_executor,
+    use_executor,
+)
+from repro.core.params import (
+    CPU_INTERPRET,
+    CPU_REFERENCE,
+    CPU_XLA,
+    TPU_V4,
+    TPU_V5E,
+    HardwareParams,
+    get_target,
+)
+from repro.core.registry import (
+    NotCompiledError,
+    Operation,
+    all_operations,
+    instantiate_common,
+    operation,
+    register,
+    registered_spaces,
+)
+from repro.core import coop
+
+__all__ = [
+    "Executor",
+    "ReferenceExecutor",
+    "XlaExecutor",
+    "PallasTpuExecutor",
+    "PallasInterpretExecutor",
+    "current_executor",
+    "default_executor",
+    "use_executor",
+    "make_executor",
+    "HardwareParams",
+    "get_target",
+    "TPU_V5E",
+    "TPU_V4",
+    "CPU_INTERPRET",
+    "CPU_XLA",
+    "CPU_REFERENCE",
+    "NotCompiledError",
+    "Operation",
+    "operation",
+    "register",
+    "registered_spaces",
+    "all_operations",
+    "instantiate_common",
+    "coop",
+]

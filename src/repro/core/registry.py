@@ -1,0 +1,158 @@
+"""Operation registry — the analogue of ``GKO_REGISTER_OPERATION`` + dynamic dispatch.
+
+Ginkgo's core algorithms never name a backend: they submit *operations* to an
+executor, and dynamic polymorphism selects the backend kernel at run time.  Here,
+an :class:`Operation` is a named dispatch point; implementations are registered
+per *kernel space* (``reference`` / ``xla`` / ``pallas``), and the active
+:class:`~repro.core.executor.Executor` selects which space's implementation runs
+(at trace time — JAX's analogue of run time for kernel selection).
+
+Ginkgo semantics preserved:
+
+* an executor without a registered kernel raises :class:`NotCompiledError`
+  (Ginkgo's ``gko::NotCompiled``) in strict mode;
+* in permissive mode the executor's fallback chain is walked
+  (``pallas -> xla -> reference``), mirroring how applications in practice pair
+  a hardware backend with the reference implementation for missing kernels;
+* every implementation receives the executor as first argument so it can read
+  the hardware parameter table (Ginkgo kernels receive
+  ``std::shared_ptr<const Executor>``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+__all__ = [
+    "NotCompiledError",
+    "Operation",
+    "operation",
+    "register",
+    "registered_spaces",
+    "all_operations",
+    "instantiate_common",
+]
+
+
+class NotCompiledError(NotImplementedError):
+    """Raised when an operation has no kernel for the executor's spaces.
+
+    Analogue of ``gko::NotCompiled`` — in Ginkgo this means "this module was not
+    compiled for this backend"; here it means "no implementation registered for
+    any kernel space this executor may use".
+    """
+
+
+_OPERATIONS: Dict[str, "Operation"] = {}
+
+
+class Operation:
+    """A named, executor-dispatched operation (one ``GKO_REGISTER_OPERATION``)."""
+
+    def __init__(self, name: str, doc: str = ""):
+        if name in _OPERATIONS:
+            raise ValueError(f"operation {name!r} already defined")
+        self.name = name
+        self.__doc__ = doc or f"executor-dispatched operation {name!r}"
+        self._impls: Dict[str, Callable[..., Any]] = {}
+        _OPERATIONS[name] = self
+
+    # -- registration ---------------------------------------------------------
+    def register(self, space: str) -> Callable[[Callable], Callable]:
+        """Decorator: register ``fn(executor, *args, **kw)`` for ``space``."""
+
+        def deco(fn: Callable) -> Callable:
+            if space in self._impls:
+                raise ValueError(
+                    f"operation {self.name!r} already has a {space!r} kernel"
+                )
+            self._impls[space] = fn
+            return fn
+
+        return deco
+
+    def implementation_for(self, executor) -> Callable[..., Any]:
+        spaces = (executor.kernel_space,) if executor.strict else executor.spaces
+        for space in spaces:
+            impl = self._impls.get(space)
+            if impl is not None:
+                return impl
+        raise NotCompiledError(
+            f"operation {self.name!r} has no kernel for executor "
+            f"{executor.name!r} (searched spaces {spaces}; "
+            f"registered: {sorted(self._impls)})"
+        )
+
+    def space_used(self, executor) -> str:
+        """Which kernel space would serve this executor (for tests/telemetry)."""
+        spaces = (executor.kernel_space,) if executor.strict else executor.spaces
+        for space in spaces:
+            if space in self._impls:
+                return space
+        raise NotCompiledError(self.name)
+
+    # -- dispatch ---------------------------------------------------------------
+    def __call__(self, *args, executor=None, **kwargs):
+        from repro.core.executor import current_executor
+
+        ex = executor if executor is not None else current_executor()
+        impl = self.implementation_for(ex)
+        out = impl(ex, *args, **kwargs)
+        ex._note_dispatch(self.name)
+        return out
+
+    def __repr__(self) -> str:
+        return f"Operation({self.name!r}, spaces={sorted(self._impls)})"
+
+
+def operation(name: str, doc: str = "") -> Operation:
+    """Create (or fetch) the named operation."""
+    if name in _OPERATIONS:
+        return _OPERATIONS[name]
+    return Operation(name, doc)
+
+
+def register(name: str, space: str) -> Callable[[Callable], Callable]:
+    """Shorthand: ``@register("spmv_ell", "pallas")``."""
+    return operation(name).register(space)
+
+
+def registered_spaces(name: str) -> tuple:
+    return tuple(sorted(_OPERATIONS[name]._impls))
+
+
+def all_operations() -> Dict[str, "Operation"]:
+    return dict(_OPERATIONS)
+
+
+def instantiate_common(
+    name: str,
+    skeleton: Callable[..., Any],
+    space_params: Dict[str, Dict[str, Any]],
+) -> Operation:
+    """Bind one kernel *skeleton* to several kernel spaces — the ``common/`` folder.
+
+    Ginkgo keeps CUDA/HIP-identical kernels in ``common/`` parameterized by
+    architecture-specific constants, and each backend includes the skeleton with
+    its own parameter values.  ``instantiate_common`` is the JAX analogue: the
+    skeleton is a function ``skeleton(executor, *args, **bound_params)`` and each
+    kernel space binds its own parameter dict.
+
+    Example::
+
+        instantiate_common(
+            "subgroup_reduce_bench",
+            _reduce_skeleton,
+            {
+                "pallas": dict(block_rows=256),
+                "xla": dict(block_rows=1024),
+            },
+        )
+    """
+    op = operation(name)
+    for space, params in space_params.items():
+        bound = functools.partial(skeleton, **params)
+        functools.update_wrapper(bound, skeleton)
+        op.register(space)(bound)
+    return op

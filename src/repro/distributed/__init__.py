@@ -1,0 +1,5 @@
+"""repro.distributed — sharding rules + explicit collective algorithms."""
+
+from repro.distributed import collective_matmul, sharding
+
+__all__ = ["sharding", "collective_matmul"]

@@ -1,0 +1,36 @@
+"""repro.kernels — hardware-native Pallas TPU kernels (the CUDA/HIP slot).
+
+Importing this package registers every Pallas implementation in the operation
+registry (the analogue of compiling Ginkgo's device backends: without this
+import, executors fall back to the ``xla`` / ``reference`` kernel spaces, or
+raise ``NotCompiledError`` in strict mode).
+
+Layout: one directory per hot-spot, each with
+  kernel.py — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling
+  ops.py    — registry bindings / jit wrappers
+  ref.py    — the pure-jnp oracle the kernel is validated against
+"""
+
+import repro.kernels.flash_attention.ops  # noqa: F401
+import repro.kernels.rmsnorm.ops  # noqa: F401
+import repro.kernels.rwkv6.ops  # noqa: F401
+import repro.kernels.spmv_ell.ops  # noqa: F401
+import repro.kernels.spmv_sellp.ops  # noqa: F401
+import repro.kernels.ssd.ops  # noqa: F401
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.rmsnorm.kernel import rmsnorm
+from repro.kernels.rwkv6.kernel import rwkv6_scan, rwkv6_scan_log
+from repro.kernels.spmv_ell.kernel import spmv_ell
+from repro.kernels.spmv_sellp.kernel import spmv_sellp
+from repro.kernels.ssd.kernel import ssd_scan
+
+__all__ = [
+    "flash_attention",
+    "rmsnorm",
+    "rwkv6_scan",
+    "rwkv6_scan_log",
+    "spmv_ell",
+    "spmv_sellp",
+    "ssd_scan",
+]

@@ -1,0 +1,180 @@
+"""Causal GQA flash attention — Pallas TPU kernel.
+
+TPU-adapted blocking (DESIGN.md: rethink tiling for VMEM + MXU rather than
+porting a CUDA flash kernel):
+
+* grid = (B, Hq, Sq/block_q, Skv/block_kv); the kv axis is innermost, so the
+  running softmax state (m, l, acc) persists in VMEM scratch across kv steps
+  and is finalized on the last one (TPU grids execute sequentially — the
+  revisit-accumulate idiom replaces CUDA's per-CTA inner loop);
+* GQA is folded into the index_map: query head ``h`` reads kv head
+  ``h // group`` — no repeated K/V materialization (paper's "consumer-specific
+  kernel design": the kernel serves exactly the layer contract we need);
+* fully-masked kv blocks (kv_start > q_end under causality) are predicated off
+  with ``pl.when``;
+* all softmax statistics are f32 regardless of input dtype; QK^T and PV hit
+  the MXU with ``preferred_element_type=f32``.
+
+The running max/denominator live in (block_q, 128) scratch tiles (value
+broadcast across lanes) to stay VREG-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+_LANES = 128
+
+
+def _flash_kernel(
+    q_ref,  # (1, 1, block_q, D)
+    k_ref,  # (1, 1, block_kv, D)
+    v_ref,  # (1, 1, block_kv, D)
+    o_ref,  # (1, 1, block_q, D)
+    m_scr,  # (block_q, LANES) f32
+    l_scr,  # (block_q, LANES) f32
+    acc_scr,  # (block_q, D) f32
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_kv: int,
+    kv_offset: int,
+    kv_len: int,
+    num_kv_blocks: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal block-level skip: kv block strictly above the diagonal band
+    q_end = qi * block_q + block_q - 1 + kv_offset  # last absolute q position
+    kv_start = ki * block_kv
+    should_run = (kv_start <= q_end) if causal else True
+
+    @pl.when(should_run)
+    def _step():
+        q = q_ref[0, 0]
+        k = k_ref[0, 0]
+        s = jax.lax.dot_general(
+            q,
+            k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (block_q, block_kv)
+
+        kv_idx = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        if causal:
+            q_idx = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            s = jnp.where(q_idx + kv_offset >= kv_idx, s, NEG_INF)
+        # mask padded kv columns (kv_len < padded Skv)
+        s = jnp.where(kv_idx < kv_len, s, NEG_INF)
+
+        m_prev = m_scr[...][:, :1]  # (block_q, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked rows (all -inf) so exp() sees a finite argument
+        m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(s == NEG_INF, 0.0, p)
+        corr = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_safe))
+
+        l_prev = l_scr[...][:, :1]
+        l_new = corr * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype),
+            v_ref[0, 0],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...][:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)  # padded/fully-masked rows -> 0 output
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_kv", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,  # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not divisible by Hkv={Hkv}")
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    # `kv_offset` aligns the causal diagonal when Skv > S (queries are the
+    # last S positions of the kv stream — chunked prefill / append decoding).
+    kv_offset = Skv - S
+
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, Skv)
+    pq = ((S + block_q - 1) // block_q) * block_q
+    pkv = ((Skv + block_kv - 1) // block_kv) * block_kv
+    if pq != S:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq - S), (0, 0)))
+    if pkv != Skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pkv - Skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pkv - Skv), (0, 0)))
+    nq = pq // block_q
+    nkv = pkv // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_kv=block_kv,
+        kv_offset=kv_offset,
+        kv_len=Skv,
+        num_kv_blocks=nkv,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, pq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S, :]

@@ -1,0 +1,60 @@
+"""Registry bindings for attention (operation ``nn_attention``)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import registry
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import mha_ref
+
+attention_op = registry.operation(
+    "nn_attention", "softmax attention (B,Hq,S,D)x(B,Hkv,Skv,D) -> (B,Hq,S,D)"
+)
+
+
+@attention_op.register("reference")
+def _attn_reference(ex, q, k, v, causal: bool = True, scale: Optional[float] = None):
+    return mha_ref(q, k, v, causal=causal, scale=scale)
+
+
+@attention_op.register("xla")
+def _attn_xla(ex, q, k, v, causal: bool = True, scale: Optional[float] = None):
+    # dense-materialized attention; XLA fuses but the S x Skv score matrix hits
+    # HBM — the Pallas kernel is the memory-saving path
+    return mha_ref(q, k, v, causal=causal, scale=scale)
+
+
+def _vmem_bytes(block_q: int, block_kv: int, d: int, itemsize: int) -> int:
+    """Working set per grid step: q/k/v/o tiles + f32 scratch (m, l, acc) +
+    the (block_q, block_kv) score tile."""
+    tiles = (block_q + 2 * block_kv + block_q) * d * itemsize
+    scratch = block_q * (128 * 2 + d) * 4
+    scores = block_q * block_kv * 4
+    return tiles + scratch + scores
+
+
+@attention_op.register("pallas")
+def _attn_pallas(ex, q, k, v, causal: bool = True, scale: Optional[float] = None):
+    # block shapes from the hardware table (MXU-aligned), shrunk until the
+    # working set fits the target's VMEM budget (paper: per-architecture
+    # kernel configuration parameters live with the executor, not the kernel)
+    block_q = block_kv = max(ex.hw.mxu_dim, 128)
+    d = q.shape[-1]
+    budget = ex.hw.vmem_limit_bytes // 4  # leave headroom for double-buffering
+    while (
+        block_q > ex.hw.sublane_count
+        and _vmem_bytes(block_q, block_kv, d, q.dtype.itemsize) > budget
+    ):
+        block_q //= 2
+        block_kv //= 2
+    return flash_attention(
+        q,
+        k,
+        v,
+        causal=causal,
+        scale=scale,
+        block_q=block_q,
+        block_kv=block_kv,
+        interpret=ex.interpret,
+    )

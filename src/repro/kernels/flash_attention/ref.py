@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,  # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Dense softmax attention with GQA head sharing (kv heads repeated)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    Skv = k.shape[2]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if causal:
+        q_idx = jnp.arange(S)[:, None] + (Skv - S)  # align ends (prefill cache)
+        kv_idx = jnp.arange(Skv)[None, :]
+        mask = q_idx >= kv_idx
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return out.astype(q.dtype)

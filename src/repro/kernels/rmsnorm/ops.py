@@ -1,0 +1,25 @@
+"""Registry bindings for fused RMSNorm (operation ``nn_rmsnorm``)."""
+
+from __future__ import annotations
+
+from repro.core import registry
+from repro.kernels.rmsnorm.kernel import rmsnorm as rmsnorm_pallas
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+rmsnorm_op = registry.operation("nn_rmsnorm", "fused RMSNorm over the last axis")
+
+
+@rmsnorm_op.register("reference")
+def _rmsnorm_reference(ex, x, weight, eps: float = 1e-6):
+    return rmsnorm_ref(x, weight, eps)
+
+
+@rmsnorm_op.register("xla")
+def _rmsnorm_xla(ex, x, weight, eps: float = 1e-6):
+    # same math; XLA fuses this well — the Pallas win is explicit tiling
+    return rmsnorm_ref(x, weight, eps)
+
+
+@rmsnorm_op.register("pallas")
+def _rmsnorm_pallas(ex, x, weight, eps: float = 1e-6):
+    return rmsnorm_pallas(x, weight, eps=eps, interpret=ex.interpret)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """y = x / rms(x) * weight, rms over the last axis, computed in f32."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)

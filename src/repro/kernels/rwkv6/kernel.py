@@ -1,0 +1,170 @@
+"""RWKV6 (Finch) WKV chunked scan — Pallas TPU kernel.
+
+Chunked form of the per-channel-decay recurrence (DESIGN.md: the GPU
+implementations carry per-warp state in registers; on TPU the (K, V) state is a
+VMEM scratch tile carried across the sequential chunk grid):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+
+Within a chunk of length L, with W[t] = sum_{r<=t} log w_r:
+
+    y_t = (r_t * e^{W[t-1]}) . S_0
+        + sum_{s<t} [sum_c r_tc k_sc e^{W[t-1,c]-W[s,c]}] v_s
+        + (r_t . (u * k_t)) v_t
+
+Numerical-stability choice: the pairwise term uses the *ratio* form
+e^{W[t-1]-W[s]} (always <= 1 for s < t) materialized as an (L, L, K) tensor,
+NOT the scaled-matmul factorization (r*e^W)(k*e^-W) whose right factor
+overflows f32 for strong decays.  This trades MXU utilization for
+unconditional stability; chunk length defaults to 32 so the (L,L,K) tile stays
+small (32*32*64*4B = 256 KiB).  The inter-chunk and state-update terms are
+MXU matmuls (exponents <= 0, stable).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv6_kernel(
+    r_ref,  # (1, L, 1, K)
+    k_ref,  # (1, L, 1, K)
+    v_ref,  # (1, L, 1, V)
+    logw_ref,  # (1, L, 1, K)  log of decay (<= 0)
+    u_ref,  # (1, K)
+    y_ref,  # (1, L, 1, V) out
+    state_ref,  # (1, 1, K, V) out (last chunk)
+    s_scr,  # (K, V) f32 scratch
+    *,
+    num_chunks: int,
+):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)  # (L, K)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (L, K)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (L, V)
+    logw = logw_ref[0, :, 0, :].astype(jnp.float32)  # (L, K)
+    u = u_ref[0, :].astype(jnp.float32)  # (K,)
+
+    L, K = r.shape
+    W = jnp.cumsum(logw, axis=0)  # (L, K), W[t] = sum_{r<=t} log w_r
+    Wprev = W - logw  # W[t-1] with W[-1] = 0
+
+    # inter-chunk: (r * e^{W[t-1]}) @ S_0   — MXU matmul, exponents <= 0
+    r_dec = r * jnp.exp(Wprev)
+    y_inter = jax.lax.dot_general(
+        r_dec, s_scr[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (L, V)
+
+    # intra-chunk pairwise term, ratio form (stable): G[t,s] = sum_c r_tc k_sc
+    # e^{W[t-1,c] - W[s,c]} for s < t; diagonal handled by the u-bonus term.
+    diff = Wprev[:, None, :] - W[None, :, :]  # (L, L, K), <= 0 for s < t
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    strict = t_idx > s_idx
+    ratio = jnp.exp(jnp.where(strict[..., None], diff, 0.0))
+    G = jnp.sum(
+        r[:, None, :] * k[None, :, :] * ratio, axis=-1
+    )  # (L, L)
+    G = jnp.where(strict, G, 0.0)
+    y_intra = jax.lax.dot_general(
+        G, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, V)
+
+    # current-token bonus: (r_t . (u * k_t)) v_t
+    bonus = jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True)  # (L, 1)
+    y_ref[0, :, 0, :] = (y_inter + y_intra + bonus * v).astype(y_ref.dtype)
+
+    # state update: S = diag(e^{W[L-1]}) S_0 + sum_s (k_s e^{W[L-1]-W[s]}) v_s^T
+    chunk_dec = jnp.exp(W[-1])  # (K,)
+    k_dec = k * jnp.exp(W[-1][None, :] - W)  # (L, K), exponents <= 0
+    dS = jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (K, V)
+    s_scr[...] = chunk_dec[:, None] * s_scr[...] + dS
+
+    @pl.when(c == num_chunks - 1)
+    def _emit_state():
+        state_ref[0, 0] = s_scr[...]
+
+
+def rwkv6_scan(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # decay in (0, 1)
+    u: jax.Array,
+    *,
+    chunk: int = 32,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Convenience wrapper taking the decay in linear space.
+
+    Prefer :func:`rwkv6_scan_log` — RWKV6 parameterizes w = exp(-exp(x)), so
+    the layer owns ``logw = -exp(x)`` exactly; taking ``log(w)`` here loses
+    that and underflows for strong decays, hence the clamp.
+    """
+    logw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30))
+    return rwkv6_scan_log(r, k, v, logw, u, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan_log(
+    r: jax.Array,  # (B, S, H, K)
+    k: jax.Array,  # (B, S, H, K)
+    v: jax.Array,  # (B, S, H, V)
+    logw: jax.Array,  # (B, S, H, K) log-decay, finite and <= 0
+    u: jax.Array,  # (H, K)
+    *,
+    chunk: int = 32,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV6 scan (log-space decay); returns (y, final_state)."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, S)
+    logw = logw.astype(jnp.float32)
+    if S % chunk:
+        pad = chunk - S % chunk
+        # padding: k=0 (no contribution), logw=0 (identity decay), r=0
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = r.shape[1]
+    nc = Sp // chunk
+
+    y, state = pl.pallas_call(
+        functools.partial(_rwkv6_kernel, num_chunks=nc),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, K), lambda bh, c, H=H: (bh // H, c, bh % H, 0)),
+            pl.BlockSpec((1, chunk, 1, K), lambda bh, c, H=H: (bh // H, c, bh % H, 0)),
+            pl.BlockSpec((1, chunk, 1, V), lambda bh, c, H=H: (bh // H, c, bh % H, 0)),
+            pl.BlockSpec((1, chunk, 1, K), lambda bh, c, H=H: (bh // H, c, bh % H, 0)),
+            pl.BlockSpec((1, K), lambda bh, c, H=H: (bh % H, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, V), lambda bh, c, H=H: (bh // H, c, bh % H, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda bh, c, H=H: (bh // H, bh % H, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, H, V), r.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)
+    return y[:, :S], state

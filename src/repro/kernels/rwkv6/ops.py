@@ -1,0 +1,31 @@
+"""Registry bindings for the RWKV6 WKV scan (operation ``nn_rwkv6_scan``)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.kernels.rwkv6.kernel import rwkv6_scan_log
+from repro.kernels.rwkv6.ref import rwkv6_ref
+
+rwkv6_op = registry.operation(
+    "nn_rwkv6_scan", "RWKV6 WKV scan (log-space decay) -> (y, final_state)"
+)
+
+
+@rwkv6_op.register("reference")
+def _rwkv6_reference(ex, r, k, v, logw, u):
+    return rwkv6_ref(r, k, v, jnp.exp(logw.astype(jnp.float32)), u)
+
+
+@rwkv6_op.register("xla")
+def _rwkv6_xla(ex, r, k, v, logw, u):
+    # chunked batched-einsum formulation (xla.py) — the optimized portable path
+    from repro.kernels.rwkv6.xla import rwkv6_chunked_xla
+
+    return rwkv6_chunked_xla(r, k, v, logw, u, chunk=32)
+
+
+@rwkv6_op.register("pallas")
+def _rwkv6_pallas(ex, r, k, v, logw, u):
+    return rwkv6_scan_log(r, k, v, logw, u, chunk=32, interpret=ex.interpret)

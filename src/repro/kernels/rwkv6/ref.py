@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(
+    r: jax.Array,  # (B, S, H, K) receptance
+    k: jax.Array,  # (B, S, H, K) key
+    v: jax.Array,  # (B, S, H, V) value
+    w: jax.Array,  # (B, S, H, K) data-dependent decay in (0, 1)
+    u: jax.Array,  # (H, K) bonus for the current token
+    s0: jax.Array = None,  # (B, H, K, V) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential WKV6:
+
+        y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+    Returns (y, final_state) with y: (B, S, H, V), state: (B, H, K, V).
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def step(state, inputs):
+        r_t, k_t, v_t, w_t = inputs  # (B,H,K), (B,H,K), (B,H,V), (B,H,K)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,K,V)
+        att = state + uf[None, :, :, None] * kv
+        y_t = jnp.einsum("bhk,bhkv->bhv", r_t, att)
+        state = w_t[..., :, None] * state + kv
+        return state, y_t
+
+    inputs = (
+        jnp.moveaxis(rf, 1, 0),
+        jnp.moveaxis(kf, 1, 0),
+        jnp.moveaxis(vf, 1, 0),
+        jnp.moveaxis(wf, 1, 0),
+    )
+    s_final, ys = jax.lax.scan(step, s0.astype(jnp.float32), inputs)
+    y = jnp.moveaxis(ys, 0, 1).astype(r.dtype)
+    return y, s_final

@@ -1,0 +1,75 @@
+"""Chunked RWKV6 WKV scan in pure jnp — the optimized portable (XLA) path.
+
+Same chunk algebra as kernel.py (ratio-form pairwise decays for unconditional
+f32 stability), batched over (B, H) and scanned over chunks.  The sequential
+oracle lives in ref.py (reference space).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_chunked_xla(
+    r: jax.Array,  # (B, S, H, K)
+    k: jax.Array,
+    v: jax.Array,  # (B, S, H, V)
+    logw: jax.Array,  # (B, S, H, K) finite, <= 0
+    u: jax.Array,  # (H, K)
+    *,
+    chunk: int = 32,
+) -> Tuple[jax.Array, jax.Array]:
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, S)
+    logw = logw.astype(jnp.float32)
+    if S % chunk:
+        pad = chunk - S % chunk
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = r.shape[1]
+    nc = Sp // chunk
+    L = chunk
+
+    def resh(t, d):
+        return jnp.moveaxis(
+            t.astype(jnp.float32).reshape(B, nc, L, H, d), 1, 0
+        )  # (nc,B,L,H,d)
+
+    xs = (resh(r, K), resh(k, K), resh(v, V), resh(logw, K))
+    uf = u.astype(jnp.float32)
+
+    t_idx = jnp.arange(L)[:, None]
+    s_idx = jnp.arange(L)[None, :]
+    strict = t_idx > s_idx  # (L, L)
+
+    def step(S0, inp):
+        rc, kc, vc, lw = inp  # (B,L,H,*)
+        W = jnp.cumsum(lw, axis=1)  # (B,L,H,K)
+        Wprev = W - lw
+        r_dec = rc * jnp.exp(Wprev)
+        y_inter = jnp.einsum("blhk,bhkv->blhv", r_dec, S0)
+        # ratio-form pairwise decays (B,L,L,H,K) per chunk
+        diff = Wprev[:, :, None] - W[:, None, :]  # (B,L,L,H,K)
+        ratio = jnp.exp(jnp.where(strict[None, :, :, None, None], diff, 0.0))
+        G = jnp.einsum("blhk,bshk,blshk->blsh", rc, kc, ratio)
+        G = jnp.where(strict[None, :, :, None], G, 0.0)
+        y_intra = jnp.einsum("blsh,bshv->blhv", G, vc)
+        bonus = jnp.einsum("blhk,hk,blhk->blh", rc, uf, kc)
+        y = y_inter + y_intra + bonus[..., None] * vc
+        # state update
+        chunk_dec = jnp.exp(W[:, -1])  # (B,H,K)
+        k_dec = kc * jnp.exp(W[:, -1:][:, :, :] - W)  # broadcast (B,L,H,K)
+        dS = jnp.einsum("blhk,blhv->bhkv", k_dec, vc)
+        S1 = chunk_dec[..., None] * S0 + dS
+        return S1, y
+
+    S0 = jnp.zeros((B, H, K, V), jnp.float32)
+    S_final, ys = jax.lax.scan(step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, H, V)[:, :S]
+    return y.astype(r.dtype), S_final

@@ -1,0 +1,89 @@
+"""ELL SpMV Pallas TPU kernel.
+
+Layout (DESIGN.md §2): row-major (m, max_nnz) blocks — a (block_m, block_k)
+VMEM tile per grid step, with ``x`` held entirely in VMEM (the benchmark
+matrices keep n*4B well under the VMEM budget; the wrapper enforces this via
+the executor's ``vmem_limit_bytes``).
+
+The per-row reduction over the k axis uses the cooperative-group butterfly
+(:mod:`repro.core.coop`) when ``block_k`` is the lane axis — Ginkgo's
+"subwarp per row" ELL strategy mapped to lane-segment collectives.
+
+Grid = (m/block_m, k/block_k), k innermost; partial sums accumulate in the
+revisited output block (TPU grids iterate sequentially, so read-modify-write
+on o_ref across k steps is well-defined).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import coop
+
+
+def _spmv_ell_kernel(cols_ref, vals_ref, x_ref, o_ref, *, use_coop: bool):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vals = vals_ref[...]  # (block_m, block_k)
+    cols = cols_ref[...]
+    x = x_ref[...]  # (n,)
+    gathered = x[cols]  # gather along lanes (see DESIGN.md lowering note)
+    prod = vals * gathered
+    if use_coop:
+        # Ginkgo ELL: one subwarp reduces one row; here the "subwarp" is the
+        # full lane segment of the row tile (butterfly shfl_xor reduction).
+        row_sum = coop.subgroup(prod, prod.shape[-1]).sum()[..., :1]
+    else:
+        row_sum = jnp.sum(prod, axis=-1, keepdims=True)
+    o_ref[...] += row_sum.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_k", "use_coop", "interpret"),
+)
+def spmv_ell(
+    col_idx: jax.Array,
+    values: jax.Array,
+    x: jax.Array,
+    *,
+    block_m: int = 256,
+    block_k: int = 128,
+    use_coop: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = A @ x for ELL-format A given as (col_idx, values) of shape (m, k)."""
+    m, k = values.shape
+    n = x.shape[0]
+
+    block_m = max(min(block_m, m), 1)
+    block_k = max(min(block_k, k), 1)
+    # pad m and k to block multiples (padding: col 0, value 0 — contributes 0)
+    pm = ((m + block_m - 1) // block_m) * block_m
+    pk = ((k + block_k - 1) // block_k) * block_k
+    if (pm, pk) != (m, k):
+        col_idx = jnp.pad(col_idx, ((0, pm - m), (0, pk - k)))
+        values = jnp.pad(values, ((0, pm - m), (0, pk - k)))
+    use_coop = use_coop and (block_k & (block_k - 1) == 0)
+
+    out = pl.pallas_call(
+        functools.partial(_spmv_ell_kernel, use_coop=use_coop),
+        grid=(pm // block_m, pk // block_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec((block_m, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pm, 1), values.dtype),
+        interpret=interpret,
+    )(col_idx, values, x)
+    return out[:m, 0]

@@ -1,0 +1,33 @@
+"""Registry binding: the Pallas ELL SpMV serves operation ``spmv_ell``."""
+
+from __future__ import annotations
+
+from repro.core import registry
+from repro.kernels.spmv_ell.kernel import spmv_ell as spmv_ell_pallas
+from repro.sparse.formats import Ell
+
+
+@registry.register("spmv_ell", "pallas")
+def _spmv_ell_pallas(ex, A: Ell, x):
+    if x.ndim != 1:
+        raise NotImplementedError("pallas ELL spmv is single-rhs")
+    n = x.shape[0]
+    if n * x.dtype.itemsize > ex.hw.vmem_limit_bytes // 4:
+        # x would not fit the VMEM residency strategy on this target —
+        # fall through to the XLA kernel (Ginkgo: executor picks the kernel
+        # variant suited to the problem granularity).
+        from repro.sparse.ops import _spmv_ell_xla
+
+        return _spmv_ell_xla(ex, A, x)
+    # block shape from the hardware table: sublane-aligned rows, lane-sized k
+    block_m = max(ex.hw.sublane_count * 32, 8)
+    block_k = ex.hw.lane_count
+    return spmv_ell_pallas(
+        A.col_idx,
+        A.values,
+        x,
+        block_m=block_m,
+        block_k=block_k,
+        use_coop=True,
+        interpret=ex.interpret,
+    )

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the ELL SpMV kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(col_idx: jax.Array, values: jax.Array, x: jax.Array) -> jax.Array:
+    """y[i] = sum_k values[i,k] * x[col_idx[i,k]] (padding: col 0 / value 0)."""
+    return jnp.sum(values * x[col_idx], axis=1)

@@ -1,0 +1,115 @@
+"""SELL-P SpMV Pallas TPU kernel with scalar-prefetched slice offsets.
+
+This is the paper's throughput format adapted to TPU ragged-block idioms:
+
+* slices are ``C`` rows tall (C = 8 sublanes by default, vs Ginkgo's GPU 64);
+* each slice stores ``slice_cols[s]`` padded columns (multiple of
+  ``stride_factor``), values column-major within the slice — so one *block* of
+  ``block_cols`` columns is a contiguous ``(block_cols, C)`` VMEM tile of the
+  flat buffer;
+* ``slice_sets`` rides in scalar-prefetch SMEM and drives the data-dependent
+  ``index_map`` — the TPU analogue of a GPU kernel reading per-slice offsets
+  from global memory (same trick Pallas uses for ragged attention / MoE);
+* grid = (num_slices, max_blocks); blocks beyond a slice's width are predicated
+  off with ``pl.when`` and their loads clamped in-bounds (they read the next
+  slice's data and discard it — benign, and cheaper than a branchy loader).
+
+Requires ``stride_factor % block_cols == 0`` (or block_cols % stride... we pick
+``block_cols = stride_factor``) so slice offsets land on block boundaries.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sellp_kernel(
+    slice_sets_ref,  # scalar prefetch: (num_slices+1,) int32
+    cols_ref,  # (block_cols, C) tile of the flat col_idx
+    vals_ref,  # (block_cols, C) tile of the flat values
+    x_ref,  # (n,) — x resident in VMEM
+    o_ref,  # (1, C) output tile for this slice
+    *,
+    block_cols: int,
+):
+    s = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    width = slice_sets_ref[s + 1] - slice_sets_ref[s]
+
+    @pl.when(j * block_cols < width)
+    def _accumulate():
+        vals = vals_ref[...]  # (block_cols, C)
+        cols = cols_ref[...]
+        x = x_ref[...]
+        contrib = vals * x[cols]
+        # zero the tail block's columns that spill past this slice's width
+        col_in_slice = j * block_cols + jax.lax.broadcasted_iota(
+            jnp.int32, contrib.shape, 0
+        )
+        contrib = jnp.where(col_in_slice < width, contrib, 0.0)
+        o_ref[...] += jnp.sum(contrib, axis=0, keepdims=True).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "slice_size", "block_cols", "max_slice_cols", "interpret"),
+)
+def spmv_sellp(
+    col_idx: jax.Array,
+    values: jax.Array,
+    slice_sets: jax.Array,
+    x: jax.Array,
+    *,
+    m: int,
+    slice_size: int,
+    block_cols: int,
+    max_slice_cols: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = A @ x for SELL-P A (flat layout, see repro.sparse.formats.Sellp)."""
+    C = slice_size
+    num_slices = slice_sets.shape[0] - 1
+    n = x.shape[0]
+    total = values.shape[0]
+    total_blocks = total // (block_cols * C)
+    max_blocks = max(-(-max_slice_cols // block_cols), 1)
+
+    def block_index(s, j, ss_ref):
+        # flat-block index of (slice s, column-block j); clamped in-bounds for
+        # the predicated-off tail blocks.
+        idx = ss_ref[s] // block_cols + j
+        return jnp.minimum(idx, total_blocks - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_slices, max_blocks),
+        in_specs=[
+            pl.BlockSpec((block_cols, C), lambda s, j, ss: (block_index(s, j, ss), 0)),
+            pl.BlockSpec((block_cols, C), lambda s, j, ss: (block_index(s, j, ss), 0)),
+            pl.BlockSpec((n,), lambda s, j, ss: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, C), lambda s, j, ss: (s, 0)),
+    )
+
+    out = pl.pallas_call(
+        functools.partial(_sellp_kernel, block_cols=block_cols),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_slices, C), values.dtype),
+        interpret=interpret,
+    )(
+        slice_sets,
+        col_idx.reshape(total // C, C),
+        values.reshape(total // C, C),
+        x,
+    )
+    return out.reshape(num_slices * C)[:m]

@@ -1,0 +1,29 @@
+"""Registry binding: the Pallas SELL-P SpMV serves operation ``spmv_sellp``."""
+
+from __future__ import annotations
+
+from repro.core import registry
+from repro.kernels.spmv_sellp.kernel import spmv_sellp as spmv_sellp_pallas
+from repro.sparse.formats import Sellp
+
+
+@registry.register("spmv_sellp", "pallas")
+def _spmv_sellp_pallas(ex, A: Sellp, x):
+    if x.ndim != 1:
+        raise NotImplementedError("pallas SELL-P spmv is single-rhs")
+    n = x.shape[0]
+    if n * x.dtype.itemsize > ex.hw.vmem_limit_bytes // 4:
+        from repro.sparse.ops import _spmv_sellp_xla
+
+        return _spmv_sellp_xla(ex, A, x)
+    return spmv_sellp_pallas(
+        A.col_idx,
+        A.values,
+        A.slice_sets,
+        x,
+        m=A.shape[0],
+        slice_size=A.slice_size,
+        block_cols=A.stride_factor,
+        max_slice_cols=A.max_slice_cols,
+        interpret=ex.interpret,
+    )

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SELL-P SpMV kernel (flat slice layout)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmv_sellp_ref(
+    col_idx: jax.Array,
+    values: jax.Array,
+    slice_sets,  # host-readable (numpy) — oracle iterates slices in Python
+    x: jax.Array,
+    m: int,
+    slice_size: int,
+) -> jax.Array:
+    """Direct readback of the SELL-P layout, slice by slice."""
+    C = slice_size
+    ss = np.asarray(slice_sets)
+    num_slices = ss.shape[0] - 1
+    y = jnp.zeros((num_slices * C,), dtype=values.dtype)
+    for s in range(num_slices):
+        lo, hi = int(ss[s]), int(ss[s + 1])
+        width = hi - lo
+        block_v = values[lo * C : hi * C].reshape(width, C)
+        block_c = col_idx[lo * C : hi * C].reshape(width, C)
+        contrib = (block_v * x[block_c]).sum(axis=0)
+        y = y.at[s * C : (s + 1) * C].set(contrib)
+    return y[:m]

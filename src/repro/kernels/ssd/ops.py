@@ -1,0 +1,29 @@
+"""Registry bindings for the Mamba2 SSD scan (operation ``nn_ssd_scan``)."""
+
+from __future__ import annotations
+
+from repro.core import registry
+from repro.kernels.ssd.kernel import ssd_scan
+from repro.kernels.ssd.ref import ssd_ref
+
+ssd_op = registry.operation(
+    "nn_ssd_scan", "Mamba2 SSD scan -> (y, final_state)"
+)
+
+
+@ssd_op.register("reference")
+def _ssd_reference(ex, x, dt, A, B_mat, C):
+    return ssd_ref(x, dt, A, B_mat, C)
+
+
+@ssd_op.register("xla")
+def _ssd_xla(ex, x, dt, A, B_mat, C):
+    # chunked batched-einsum formulation (xla.py) — the optimized portable path
+    from repro.kernels.ssd.xla import ssd_chunked_xla
+
+    return ssd_chunked_xla(x, dt, A, B_mat, C, chunk=64)
+
+
+@ssd_op.register("pallas")
+def _ssd_pallas(ex, x, dt, A, B_mat, C):
+    return ssd_scan(x, dt, A, B_mat, C, chunk=64, interpret=ex.interpret)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the Mamba2 SSD scan (sequential recurrence)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jax.Array,  # (B, S, H, P)  head channels
+    dt: jax.Array,  # (B, S, H)     positive step sizes (post-softplus)
+    A: jax.Array,  # (H,)          negative per-head decay rate
+    B_mat: jax.Array,  # (B, S, G, N)  input projection (G groups, H % G == 0)
+    C: jax.Array,  # (B, S, G, N)  output projection
+    h0: jax.Array = None,  # (B, H, N, P) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential state-space recurrence:
+
+        h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T      (h: (N, P))
+        y_t = C_t^T h_t                                  (y: (P,))
+
+    Returns (y, final_state) with y: (B, S, H, P), state: (B, H, N, P).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    group = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B_mat.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    def step(h, inputs):
+        x_t, dt_t, B_t, C_t = inputs  # (B,H,P), (B,H), (B,G,N), (B,G,N)
+        Bh = jnp.repeat(B_t, group, axis=1)  # (B,H,N)
+        Ch = jnp.repeat(C_t, group, axis=1)
+        decay = jnp.exp(dt_t * Af[None, :])  # (B,H)
+        update = dt_t[..., None, None] * Bh[..., :, None] * x_t[..., None, :]
+        h = decay[..., None, None] * h + update  # (B,H,N,P)
+        y_t = jnp.einsum("bhn,bhnp->bhp", Ch, h)
+        return h, y_t
+
+    inputs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), inputs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B, S, H, P)
+    return y, h_final

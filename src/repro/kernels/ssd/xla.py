@@ -1,0 +1,85 @@
+"""Chunked SSD scan in pure jnp — the optimized *portable* (XLA-space) path.
+
+Same chunk algebra as the Pallas kernel (kernel.py), expressed as batched
+einsums inside a ``lax.scan`` over chunks: XLA gets large MXU-friendly
+contractions instead of a length-S sequential scan.  The sequential oracle
+stays in ref.py (reference space), mirroring Ginkgo's reference-vs-optimized
+kernel split.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked_xla(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,)
+    B_mat: jax.Array,  # (B, S, G, N)
+    C: jax.Array,  # (B, S, G, N)
+    *,
+    chunk: int = 64,
+) -> Tuple[jax.Array, jax.Array]:
+    Bsz, S, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    group = H // G
+    chunk = min(chunk, S)
+    if S % chunk:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+    L = chunk
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, L, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, L, H)
+    Bf = B_mat.astype(jnp.float32).reshape(Bsz, nc, L, G, N)
+    Cf = C.astype(jnp.float32).reshape(Bsz, nc, L, G, N)
+    Af = A.astype(jnp.float32)
+
+    # scan over chunks (chunk axis to front)
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+
+    t_idx = jnp.arange(L)[:, None]
+    s_idx = jnp.arange(L)[None, :]
+    lower = t_idx >= s_idx  # (L, L)
+
+    def step(h, inp):
+        xc, dtc, Bc, Cc = inp  # (B,L,H,P), (B,L,H), (B,L,G,N) x2
+        a = dtc * Af  # (B,L,H), <= 0
+        acum = jnp.cumsum(a, axis=1)  # (B,L,H)
+        # decay matrix (B,L,L,H)
+        diff = acum[:, :, None, :] - acum[:, None, :, :]
+        Ldec = jnp.where(lower[None, :, :, None], jnp.exp(diff), 0.0)
+        # intra: scores per group expanded to heads
+        CB = jnp.einsum("blgn,bsgn->blsg", Cc, Bc)  # (B,L,L,G)
+        CBh = jnp.repeat(CB, group, axis=-1)  # (B,L,L,H)
+        Gmat = CBh * Ldec * dtc[:, None, :, :]  # dt_s
+        y_intra = jnp.einsum("blsh,bshp->blhp", Gmat, xc)
+        # inter: C scaled by exp(acum) against carried state
+        Ch = jnp.repeat(Cc, group, axis=2)  # (B,L,H,N)
+        Cs = Ch * jnp.exp(acum)[..., None]
+        y_inter = jnp.einsum("blhn,bhnp->blhp", Cs, h)
+        # state update
+        chunk_decay = jnp.exp(acum[:, -1, :])  # (B,H)
+        Bh = jnp.repeat(Bc, group, axis=2)  # (B,L,H,N)
+        Bs = Bh * (jnp.exp(acum[:, -1:, :] - acum) * dtc)[..., None]
+        h = chunk_decay[..., None, None] * h + jnp.einsum("blhn,blhp->bhnp", Bs, xc)
+        return h, y_intra + y_inter
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), h_final

@@ -1,0 +1,5 @@
+"""repro.launch — mesh, steps, dry-run, training and serving drivers.
+
+NOTE: import ``repro.launch.dryrun`` only as a __main__ entry point — it sets
+XLA_FLAGS for 512 placeholder devices before jax initializes.
+"""

@@ -1,0 +1,5 @@
+"""repro.models — the assigned architectures, one contract (see lm.py)."""
+
+from repro.models import lm
+
+__all__ = ["lm"]

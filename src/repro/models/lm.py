@@ -1,0 +1,645 @@
+"""Language models for every assigned architecture family.
+
+One module, four families, one contract:
+
+* ``init_model(rng, cfg) -> (params, axes)``   — stacked-layer pytrees
+* ``forward(params, cfg, tokens|embeds) -> (logits, metrics)``
+* ``init_cache(cfg, batch, s_max) -> cache``   — family-specific cache pytree
+* ``prefill(params, cfg, tokens|embeds, cache) -> (logits, cache)``
+* ``decode_step(params, cfg, token|embed, length, cache) -> (logits, cache)``
+* ``loss_fn(params, cfg, batch) -> (loss, metrics)``
+
+Layers are stacked with ``lax.scan`` (one compiled block per family — critical
+for 40-cell dry-run compile times) and every hot op dispatches through the
+operation registry, so the same model runs on the Reference / XLA / Pallas
+executors unchanged (the paper's separation applied at framework scale).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn_lib
+from repro.nn import mamba as mamba_lib
+from repro.nn import moe as moe_lib
+from repro.nn import rwkv as rwkv_lib
+from repro.nn.attention import KVCache, MLACache
+from repro.nn.common import ParamBuilder, map_axes, stack_axes
+from repro.nn.layers import (
+    embed,
+    embedding_init,
+    gelu_mlp,
+    gelu_mlp_init,
+    layernorm,
+    layernorm_init,
+    rmsnorm,
+    rmsnorm_init,
+    swiglu,
+    swiglu_init,
+    unembed,
+)
+from repro.nn.mamba import MambaState
+from repro.nn.rwkv import RWKVState
+
+
+def _norm_init(rng, cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm_kind == "layernorm":
+        return layernorm_init(rng, d)
+    return rmsnorm_init(rng, d)
+
+
+def _norm(p, x, cfg):
+    if cfg.norm_kind == "layernorm":
+        return layernorm(p, x, cfg.norm_eps)
+    return rmsnorm(p, x, cfg.norm_eps)
+
+
+def _sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    """(B, S) -> (B, S, d) standard transformer sinusoidal embedding."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    out = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    if d % 2:
+        out = jnp.pad(out, ((0, 0), (0, 0), (0, 1)))
+    return out
+
+
+def _vmap_init(layer_init, rng, n, cfg):
+    """Stack ``n`` layers of params; axes from one extra trace + 'layers' prefix."""
+    keys = jax.random.split(rng, n)
+    params = jax.vmap(lambda k: layer_init(k, cfg)[0])(keys)
+    _, axes = layer_init(keys[0], cfg)  # axes tree only (strings, not traceable)
+    return params, stack_axes(axes)
+
+
+# =============================================================================
+# transformer family (dense / mla / moe)
+# =============================================================================
+
+def _tf_block_init(rng, cfg):
+    pb = ParamBuilder(rng, _dtype(cfg))
+    n1, a1 = _norm_init(pb.fork(), cfg)
+    pb.child("norm1", n1, a1)
+    if cfg.family == "mla":
+        ap, aa = attn_lib.mla_init(pb.fork(), cfg, dtype=_dtype(cfg))
+    else:
+        ap, aa = attn_lib.gqa_init(pb.fork(), cfg, dtype=_dtype(cfg))
+    pb.child("attn", ap, aa)
+    n2, a2 = _norm_init(pb.fork(), cfg)
+    pb.child("norm2", n2, a2)
+    if cfg.family == "moe":
+        mp, ma = moe_lib.moe_init(pb.fork(), cfg, dtype=_dtype(cfg))
+        pb.child("moe", mp, ma)
+    elif cfg.mlp_kind == "gelu":
+        mp, ma = gelu_mlp_init(pb.fork(), cfg.d_model, cfg.d_ff, dtype=_dtype(cfg))
+        pb.child("mlp", mp, ma)
+    else:
+        mp, ma = swiglu_init(pb.fork(), cfg.d_model, cfg.d_ff, dtype=_dtype(cfg))
+        pb.child("mlp", mp, ma)
+    return pb.build()
+
+
+def _tf_block_forward(bp, x, cfg, positions, executor=None):
+    rs = cfg.residual_scale
+    h = _norm(bp["norm1"], x, cfg)
+    if cfg.family == "mla":
+        a = attn_lib.mla_forward(bp["attn"], h, cfg, positions, executor=executor)
+    else:
+        a = attn_lib.gqa_forward(bp["attn"], h, cfg, positions, executor=executor)
+    x = x + rs * a
+    h = _norm(bp["norm2"], x, cfg)
+    metrics = {}
+    if cfg.family == "moe":
+        m, metrics = moe_lib.moe_forward(bp["moe"], h, cfg)
+    elif cfg.mlp_kind == "gelu":
+        m = gelu_mlp(bp["mlp"], h)
+    else:
+        m = swiglu(bp["mlp"], h)
+    x = x + rs * m
+    return x, metrics
+
+
+def _tf_block_prefill(bp, x, cfg, positions, cache, executor=None):
+    rs = cfg.residual_scale
+    h = _norm(bp["norm1"], x, cfg)
+    if cfg.family == "mla":
+        a, cache = attn_lib.mla_prefill(bp["attn"], h, cfg, positions, cache, executor=executor)
+    else:
+        a, cache = attn_lib.gqa_prefill(bp["attn"], h, cfg, positions, cache, executor=executor)
+    x = x + rs * a
+    h = _norm(bp["norm2"], x, cfg)
+    if cfg.family == "moe":
+        m, _ = moe_lib.moe_forward(bp["moe"], h, cfg)
+    elif cfg.mlp_kind == "gelu":
+        m = gelu_mlp(bp["mlp"], h)
+    else:
+        m = swiglu(bp["mlp"], h)
+    return x + rs * m, cache
+
+
+def _tf_block_decode(bp, x, cfg, length, cache, executor=None):
+    rs = cfg.residual_scale
+    h = _norm(bp["norm1"], x, cfg)
+    if cfg.family == "mla":
+        a, cache = attn_lib.mla_decode(bp["attn"], h, cfg, length, cache, executor=executor)
+    else:
+        a, cache = attn_lib.gqa_decode(bp["attn"], h, cfg, length, cache, executor=executor)
+    x = x + rs * a
+    h = _norm(bp["norm2"], x, cfg)
+    if cfg.family == "moe":
+        m, _ = moe_lib.moe_forward(bp["moe"], h, cfg)
+    elif cfg.mlp_kind == "gelu":
+        m = gelu_mlp(bp["mlp"], h)
+    else:
+        m = swiglu(bp["mlp"], h)
+    return x + rs * m, cache
+
+
+# =============================================================================
+# rwkv6 family
+# =============================================================================
+
+def _rwkv_block_init(rng, cfg):
+    pb = ParamBuilder(rng, _dtype(cfg))
+    n1, a1 = layernorm_init(pb.fork(), cfg.d_model)
+    pb.child("ln1", n1, a1)
+    tm, tma = rwkv_lib.time_mix_init(pb.fork(), cfg, dtype=_dtype(cfg))
+    pb.child("time_mix", tm, tma)
+    n2, a2 = layernorm_init(pb.fork(), cfg.d_model)
+    pb.child("ln2", n2, a2)
+    cm, cma = rwkv_lib.channel_mix_init(pb.fork(), cfg, dtype=_dtype(cfg))
+    pb.child("channel_mix", cm, cma)
+    return pb.build()
+
+
+def _rwkv_block_forward(bp, x, cfg, state=None, executor=None):
+    h = layernorm(bp["ln1"], x, cfg.norm_eps)
+    a, state = rwkv_lib.time_mix_forward(bp["time_mix"], h, cfg, state, executor=executor)
+    x = x + a
+    h = layernorm(bp["ln2"], x, cfg.norm_eps)
+    c, state = rwkv_lib.channel_mix_forward(bp["channel_mix"], h, cfg, state)
+    return x + c, state
+
+
+def _rwkv_block_step(bp, x, cfg, state):
+    h = layernorm(bp["ln1"], x, cfg.norm_eps)
+    a, state = rwkv_lib.time_mix_step(bp["time_mix"], h, cfg, state)
+    x = x + a
+    h = layernorm(bp["ln2"], x, cfg.norm_eps)
+    c, state = rwkv_lib.channel_mix_forward(bp["channel_mix"], h, cfg, state)
+    return x + c, state
+
+
+# =============================================================================
+# hybrid family (zamba2: mamba2 backbone + shared attention block)
+# =============================================================================
+
+def _shared_cfg(cfg):
+    """The shared transformer block operates at width 2*d_model."""
+    return dataclasses.replace(
+        cfg,
+        family="dense",
+        d_model=2 * cfg.d_model,
+        head_dim=2 * cfg.d_model // cfg.n_heads,
+        d_ff=cfg.d_ff,
+    )
+
+
+def _zamba_shared_init(rng, cfg):
+    scfg = _shared_cfg(cfg)
+    pb = ParamBuilder(rng, _dtype(cfg))
+    n1, a1 = _norm_init(pb.fork(), scfg)
+    pb.child("norm1", n1, a1)
+    ap, aa = attn_lib.gqa_init(pb.fork(), scfg, dtype=_dtype(cfg))
+    pb.child("attn", ap, aa)
+    n2, a2 = _norm_init(pb.fork(), scfg)
+    pb.child("norm2", n2, a2)
+    mp, ma = swiglu_init(pb.fork(), scfg.d_model, scfg.d_ff, dtype=_dtype(cfg))
+    pb.child("mlp", mp, ma)
+    pb.param(
+        "out_proj", (scfg.d_model, cfg.d_model), ("mlp", "embed"),
+        std=scfg.d_model ** -0.5,
+    )
+    return pb.build()
+
+
+def _zamba_lora_init(rng, cfg):
+    """Per-invocation LoRA deltas on the shared q/k/v projections."""
+    scfg = _shared_cfg(cfg)
+    d2 = scfg.d_model
+    H, hd = scfg.n_heads, scfg.resolved_head_dim
+    r = cfg.lora_rank
+    pb = ParamBuilder(rng, _dtype(cfg))
+    for name, dout in (("q", H * hd), ("k", H * hd), ("v", H * hd)):
+        pb.param(f"{name}_a", (d2, r), ("embed", None), std=d2 ** -0.5)
+        pb.param(f"{name}_b", (r, dout), (None, "heads"), std=1e-4)
+    return pb.build()
+
+
+def _zamba_shared_forward(sp, lp, x2, cfg, positions, cache=None, length=None,
+                          mode="forward", executor=None):
+    """Shared block with per-invocation LoRA. x2: (B, S, 2d)."""
+    scfg = _shared_cfg(cfg)
+    # apply LoRA deltas to the shared projections (functional update)
+    ap = dict(sp["attn"])
+    for name, key in (("q", "wq"), ("k", "wk"), ("v", "wv")):
+        ap[key] = sp["attn"][key] + lp[f"{name}_a"] @ lp[f"{name}_b"]
+    h = _norm(sp["norm1"], x2, scfg)
+    if mode == "forward":
+        a = attn_lib.gqa_forward(ap, h, scfg, positions, executor=executor)
+    elif mode == "prefill":
+        a, cache = attn_lib.gqa_prefill(ap, h, scfg, positions, cache, executor=executor)
+    else:
+        a, cache = attn_lib.gqa_decode(ap, h, scfg, length, cache, executor=executor)
+    x2 = x2 + a
+    h = _norm(sp["norm2"], x2, scfg)
+    x2 = x2 + swiglu(sp["mlp"], h)
+    return x2 @ sp["out_proj"], cache
+
+
+def _zamba_groups(cfg):
+    every = cfg.shared_attn_every
+    if cfg.n_layers % every:
+        raise ValueError(
+            f"zamba: n_layers {cfg.n_layers} not a multiple of shared_attn_every {every}"
+        )
+    return cfg.n_layers // every, every
+
+
+# =============================================================================
+# model init
+# =============================================================================
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_model(rng, cfg) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    pb = ParamBuilder(rng, _dtype(cfg))
+    ep, ea = embedding_init(pb.fork(), cfg.vocab, cfg.d_model, dtype=_dtype(cfg))
+    pb.child("embedding", ep, ea)
+
+    if cfg.family in ("dense", "mla", "moe"):
+        lp, la = _vmap_init(_tf_block_init, pb.fork(), cfg.n_layers, cfg)
+        pb.child("blocks", lp, la)
+    elif cfg.family == "rwkv6":
+        n0, a0 = layernorm_init(pb.fork(), cfg.d_model)
+        pb.child("ln0", n0, a0)  # rwkv normalizes the embedding
+        lp, la = _vmap_init(_rwkv_block_init, pb.fork(), cfg.n_layers, cfg)
+        pb.child("blocks", lp, la)
+    elif cfg.family == "hybrid":
+        G, per = _zamba_groups(cfg)
+        keys = jax.random.split(pb.fork(), G)
+
+        def _minit(rng, c):
+            return mamba_lib.mamba_init(rng, c, dtype=_dtype(c))
+
+        mp = jax.vmap(lambda k: _vmap_init(_minit, k, per, cfg)[0])(keys)
+        _, ma = _vmap_init(_minit, keys[0], per, cfg)
+        pb.child("mamba", mp, stack_axes(ma))
+        sp, sa = _zamba_shared_init(pb.fork(), cfg)
+        pb.child("shared", sp, sa)
+        lp, la = _vmap_init(_zamba_lora_init, pb.fork(), G, cfg)
+        pb.child("lora", lp, la)
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+
+    nf, na = _norm_init(pb.fork(), cfg)
+    pb.child("final_norm", nf, na)
+    if not cfg.tie_embeddings:
+        pb.param(
+            "lm_head", (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+            std=cfg.d_model ** -0.5,
+        )
+    return pb.build()
+
+
+# =============================================================================
+# forward / loss
+# =============================================================================
+
+def _inputs_to_h(params, cfg, tokens, embeds, positions):
+    if cfg.frontend == "stub_embeddings":
+        if embeds is None:
+            raise ValueError(f"{cfg.name}: stub-frontend model needs `embeds`")
+        h = embeds.astype(_dtype(cfg))
+    else:
+        h = embed(params["embedding"], tokens) * cfg.emb_scale
+    if cfg.pos_kind == "sinusoidal":
+        h = h + _sinusoidal(positions, cfg.d_model).astype(h.dtype)
+    return h
+
+
+def _head(params, cfg, h):
+    h = _norm(params["final_norm"], h, cfg)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embedding"], h)
+    else:
+        logits = h @ params["lm_head"]
+    return logits.astype(jnp.float32) * cfg.logit_scale
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "block":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        # keep matmul outputs, recompute elementwise — trades temp memory for
+        # ~20% less recompute vs full block remat (§Perf cell A, step 6)
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return fn
+
+
+def _sp(h, cfg):
+    """Sequence-parallel residual sharding (Korthikanti-style TP-SP): between
+    blocks the (B, S, d) stream is sharded (batch->data, seq->model), which
+    divides the remat-stored residuals by the model-axis size; attention's
+    kv all-gather is the (much smaller) price.  No-op when sp_spec is ()."""
+    if not cfg.sp_spec:
+        return h
+    from jax.sharding import PartitionSpec as P
+
+    batch_axes, seq_axis = cfg.sp_spec
+    return jax.lax.with_sharding_constraint(h, P(batch_axes, seq_axis, None))
+
+
+def forward(
+    params,
+    cfg,
+    tokens: Optional[jax.Array] = None,
+    embeds: Optional[jax.Array] = None,
+    *,
+    executor=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S = (tokens.shape if tokens is not None else embeds.shape[:2])
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h = _inputs_to_h(params, cfg, tokens, embeds, positions)
+    metrics: Dict[str, jax.Array] = {}
+
+    h = _sp(h, cfg)
+    if cfg.family in ("dense", "mla", "moe"):
+        def block(x, bp):
+            x, m = _tf_block_forward(bp, x, cfg, positions, executor=executor)
+            return _sp(x, cfg), m
+
+        block = _maybe_remat(block, cfg)
+        if cfg.scan_layers:
+            h, ms = jax.lax.scan(lambda x, bp: block(x, bp), h, params["blocks"])
+            metrics = {k: jnp.sum(v) for k, v in ms.items()}
+        else:
+            for i in range(cfg.n_layers):
+                bp = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+                h, m = block(h, bp)
+                metrics = {k: metrics.get(k, 0.0) + v for k, v in m.items()}
+
+    elif cfg.family == "rwkv6":
+        h = layernorm(params["ln0"], h, cfg.norm_eps)
+
+        def block(x, bp):
+            x, _ = _rwkv_block_forward(bp, x, cfg, executor=executor)
+            return _sp(x, cfg), None
+
+        block = _maybe_remat(block, cfg)
+        h, _ = jax.lax.scan(block, h, params["blocks"])
+
+    elif cfg.family == "hybrid":
+        emb0 = h
+
+        def group(x, xs):
+            mamba_group, lora_p = xs
+
+            def mblock(xc, bp):
+                y, _ = mamba_lib.mamba_forward(bp, xc, cfg, executor=executor)
+                return _sp(xc + y, cfg), None
+
+            x, _ = jax.lax.scan(mblock, x, mamba_group)
+            x2 = jnp.concatenate([x, emb0], axis=-1)
+            delta, _ = _zamba_shared_forward(
+                params["shared"], lora_p, x2, cfg, positions, executor=executor
+            )
+            return _sp(x + delta, cfg), None
+
+        group = _maybe_remat(group, cfg)
+        h, _ = jax.lax.scan(group, h, (params["mamba"], params["lora"]))
+    else:
+        raise ValueError(cfg.family)
+
+    return _head(params, cfg, h), metrics
+
+
+def loss_fn(params, cfg, batch, *, executor=None):
+    """batch: {"tokens"|"embeds", "labels"} -> (loss, metrics)."""
+    logits, metrics = forward(
+        params,
+        cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        executor=executor,
+    )
+    labels = batch["labels"]
+    # sharding-friendly CE: take_along_axis over a model-sharded vocab axis
+    # would all-gather the logits; logsumexp + one-hot contraction keeps the
+    # vocab axis sharded (the contraction lowers to a local sum + psum).
+    log_z = jax.nn.logsumexp(logits, axis=-1)
+    one_hot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.sum(logits * one_hot, axis=-1)
+    loss = jnp.mean(log_z - label_logit)
+    metrics = dict(metrics)
+    metrics["ce_loss"] = loss
+    if cfg.family == "moe":
+        aux = cfg.router_aux_weight * metrics.get("moe_lb_loss", 0.0) / cfg.n_layers
+        aux = aux + 1e-3 * metrics.get("moe_z_loss", 0.0) / cfg.n_layers
+        loss = loss + aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# =============================================================================
+# caches / serving
+# =============================================================================
+
+def init_cache(cfg, batch: int, s_max: int):
+    dt = _dtype(cfg)
+    if cfg.family in ("dense", "moe"):
+        hd = cfg.resolved_head_dim
+        return KVCache(
+            k=jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, s_max, hd), dt),
+            v=jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, s_max, hd), dt),
+        )
+    if cfg.family == "mla":
+        return MLACache(
+            c_kv=jnp.zeros((cfg.n_layers, batch, s_max, cfg.kv_lora_rank), dt),
+            k_rope=jnp.zeros((cfg.n_layers, batch, s_max, cfg.qk_rope_head_dim), dt),
+        )
+    if cfg.family == "rwkv6":
+        H = cfg.d_model // cfg.rwkv_head_dim
+        return RWKVState(
+            wkv=jnp.zeros((cfg.n_layers, batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+            shift_tm=jnp.zeros((cfg.n_layers, batch, cfg.d_model), dt),
+            shift_cm=jnp.zeros((cfg.n_layers, batch, cfg.d_model), dt),
+        )
+    if cfg.family == "hybrid":
+        G, per = _zamba_groups(cfg)
+        d_inner = cfg.ssm_expand * cfg.d_model
+        H = d_inner // cfg.ssm_head_dim
+        conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        scfg = _shared_cfg(cfg)
+        hd2 = scfg.resolved_head_dim
+        return {
+            "mamba": MambaState(
+                conv=jnp.zeros((G, per, batch, cfg.ssm_conv - 1, conv_dim), dt),
+                ssm=jnp.zeros((G, per, batch, H, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+            ),
+            "kv": KVCache(
+                k=jnp.zeros((G, batch, scfg.n_kv_heads, s_max, hd2), dt),
+                v=jnp.zeros((G, batch, scfg.n_kv_heads, s_max, hd2), dt),
+            ),
+        }
+    raise ValueError(cfg.family)
+
+
+def cache_axes(cfg):
+    """Logical-axis annotations for the cache pytree (mirrors init_cache)."""
+    if cfg.family in ("dense", "moe"):
+        return KVCache(
+            k=(None, "batch", "kv_heads", "kv_seq", None),
+            v=(None, "batch", "kv_heads", "kv_seq", None),
+        )
+    if cfg.family == "mla":
+        return MLACache(
+            c_kv=(None, "batch", "kv_seq", None),
+            k_rope=(None, "batch", "kv_seq", None),
+        )
+    if cfg.family == "rwkv6":
+        return RWKVState(
+            wkv=(None, "batch", "heads", None, None),
+            shift_tm=(None, "batch", "embed"),
+            shift_cm=(None, "batch", "embed"),
+        )
+    if cfg.family == "hybrid":
+        return {
+            "mamba": MambaState(
+                conv=(None, None, "batch", None, "mlp"),
+                ssm=(None, None, "batch", "heads", None, None),
+            ),
+            "kv": KVCache(
+                k=(None, "batch", "kv_heads", "kv_seq", None),
+                v=(None, "batch", "kv_heads", "kv_seq", None),
+            ),
+        }
+    raise ValueError(cfg.family)
+
+
+def prefill(params, cfg, tokens=None, embeds=None, cache=None, *, executor=None):
+    """Process a prompt, fill the cache at offset 0, return logits."""
+    B, S = (tokens.shape if tokens is not None else embeds.shape[:2])
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h = _inputs_to_h(params, cfg, tokens, embeds, positions)
+
+    if cfg.family in ("dense", "mla", "moe"):
+        def block(x, xs):
+            bp, lc = xs
+            x, lc = _tf_block_prefill(bp, x, cfg, positions, lc, executor=executor)
+            return x, lc
+
+        h, cache = jax.lax.scan(block, h, (params["blocks"], cache))
+
+    elif cfg.family == "rwkv6":
+        h = layernorm(params["ln0"], h, cfg.norm_eps)
+
+        def block(x, xs):
+            bp, st = xs
+            x, st = _rwkv_block_forward(bp, x, cfg, st, executor=executor)
+            return x, st
+
+        h, cache = jax.lax.scan(block, h, (params["blocks"], cache))
+
+    elif cfg.family == "hybrid":
+        emb0 = h
+
+        def group(x, xs):
+            mamba_group, lora_p, mstate, kv = xs
+
+            def mblock(xc, ys):
+                bp, st = ys
+                y, st = mamba_lib.mamba_forward(bp, xc, cfg, st, executor=executor)
+                return xc + y, st
+
+            x, mstate = jax.lax.scan(mblock, x, (mamba_group, mstate))
+            x2 = jnp.concatenate([x, emb0], axis=-1)
+            delta, kv = _zamba_shared_forward(
+                params["shared"], lora_p, x2, cfg, positions, kv,
+                mode="prefill", executor=executor,
+            )
+            return x + delta, (mstate, kv)
+
+        h, (mstate, kv) = jax.lax.scan(
+            group, h, (params["mamba"], params["lora"], cache["mamba"], cache["kv"])
+        )
+        cache = {"mamba": mstate, "kv": kv}
+    else:
+        raise ValueError(cfg.family)
+
+    return _head(params, cfg, h), cache
+
+
+def decode_step(params, cfg, tokens=None, embeds=None, length=None, cache=None,
+                *, executor=None):
+    """One-token step; ``length`` (scalar int32) = tokens already in cache."""
+    B = tokens.shape[0] if tokens is not None else embeds.shape[0]
+    positions = jnp.full((B, 1), length, jnp.int32)
+    h = _inputs_to_h(params, cfg, tokens, embeds, positions)
+
+    if cfg.family in ("dense", "mla", "moe"):
+        def block(x, xs):
+            bp, lc = xs
+            x, lc = _tf_block_decode(bp, x, cfg, length, lc, executor=executor)
+            return x, lc
+
+        h, cache = jax.lax.scan(block, h, (params["blocks"], cache))
+
+    elif cfg.family == "rwkv6":
+        h = layernorm(params["ln0"], h, cfg.norm_eps)
+
+        def block(x, xs):
+            bp, st = xs
+            x, st = _rwkv_block_step(bp, x, cfg, st)
+            return x, st
+
+        h, cache = jax.lax.scan(block, h, (params["blocks"], cache))
+
+    elif cfg.family == "hybrid":
+        emb0 = h
+
+        def group(x, xs):
+            mamba_group, lora_p, mstate, kv = xs
+
+            def mblock(xc, ys):
+                bp, st = ys
+                y, st = mamba_lib.mamba_step(bp, xc, cfg, st)
+                return xc + y, st
+
+            x, mstate = jax.lax.scan(mblock, x, (mamba_group, mstate))
+            x2 = jnp.concatenate([x, emb0], axis=-1)
+            delta, kv = _zamba_shared_forward(
+                params["shared"], lora_p, x2, cfg, positions, kv,
+                length=length, mode="decode", executor=executor,
+            )
+            return x + delta, (mstate, kv)
+
+        h, (mstate, kv) = jax.lax.scan(
+            group, h, (params["mamba"], params["lora"], cache["mamba"], cache["kv"])
+        )
+        cache = {"mamba": mstate, "kv": kv}
+    else:
+        raise ValueError(cfg.family)
+
+    return _head(params, cfg, h), cache

@@ -1,0 +1,460 @@
+"""Attention layers: GQA (llama-style) and MLA (DeepSeek/MiniCPM3-style).
+
+The core softmax attention is the registered ``nn_attention`` operation
+(reference = dense oracle, xla = dense or chunked-scan variant, pallas = flash
+kernel).  Decode (single-token with KV cache) is pure-jnp math — a bandwidth-
+bound matvec XLA lowers optimally, so no kernel (DESIGN.md).
+
+Chunked-scan xla attention (``cfg.attn_impl == "chunked"``) is the beyond-paper
+memory optimization: a lax.scan over kv blocks with running softmax statistics
+(flash algorithm expressed in XLA) that avoids materializing the (S, Skv) score
+matrix in HBM.  It is the §Perf hillclimb lever for the memory-bound cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.nn.common import ParamBuilder
+from repro.nn.layers import apply_rope, rmsnorm_init, rmsnorm
+
+_attention_op = registry.operation("nn_attention")
+
+NEG_INF = float("-inf")
+
+
+# =============================================================================
+# chunked xla attention (flash algorithm in pure XLA, scan over kv blocks)
+#
+# Forward: online-softmax scan over kv chunks — never materializes (S, Skv).
+# Backward: flash-style custom VJP — saves only (q, k, v, out, lse) and
+# re-derives each chunk's probabilities in a second scan, so the residual
+# footprint is O(S) instead of O(S * nkv) carries the naive scan-transpose
+# would store.  This is THE memory lever for the long-context cells (§Perf).
+# =============================================================================
+
+import functools as _functools
+
+
+@_functools.lru_cache(maxsize=None)
+def _chunked_attn_core(causal: bool, scale: float, chunk: int, kv_len: int):
+    """Build the custom-vjp core for a static (causal, scale, chunk, kv_len)."""
+
+    def _masked_scores(qf, ks, ki, S, kv_offset):
+        s = jnp.einsum("bhgsd,bhtd->bhgst", qf, ks.astype(jnp.float32)) * scale
+        kv_idx = ki * chunk + jnp.arange(chunk)
+        mask = kv_idx[None, :] < kv_len
+        if causal:
+            q_pos = jnp.arange(S) + kv_offset
+            mask = mask & (q_pos[:, None] >= kv_idx[None, :])
+        return jnp.where(mask[None, None, None], s, NEG_INF)
+
+    def forward(q, k, v):
+        # q: (B, Hkv, g, S, Dqk); k: (B, Hkv, Skv_p, Dqk); v: (B, Hkv, Skv_p, Dv)
+        B, Hkv, g, S, D = q.shape
+        Dv = v.shape[-1]
+        pkv = k.shape[2]
+        nkv = pkv // chunk
+        kv_offset = kv_len - S
+        qf = q.astype(jnp.float32)
+
+        def step(carry, ki):
+            m, l, acc = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, ki * chunk, chunk, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(v, ki * chunk, chunk, axis=2)
+            s = _masked_scores(qf, ks, ki, S, kv_offset)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m, m_cur)
+            m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+            p = jnp.where(s == NEG_INF, 0.0, jnp.exp(s - m_safe))
+            corr = jnp.where(m == NEG_INF, 0.0, jnp.exp(m - m_safe))
+            l_new = corr * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * corr + jnp.einsum(
+                "bhgst,bhtd->bhgsd", p, vs.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, g, S, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, S, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, S, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nkv))
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        out = (acc / l_safe).astype(q.dtype)
+        lse = jnp.where(m == NEG_INF, NEG_INF, m + jnp.log(l_safe))  # logsumexp
+        return out, lse
+
+    @jax.custom_vjp
+    def core(q, k, v):
+        return forward(q, k, v)[0]
+
+    def core_fwd(q, k, v):
+        out, lse = forward(q, k, v)
+        return out, (q, k, v, out, lse)
+
+    def core_bwd(res, dout):
+        q, k, v, out, lse = res
+        B, Hkv, g, S, D = q.shape
+        pkv = k.shape[2]
+        nkv = pkv // chunk
+        kv_offset = kv_len - S
+        qf = q.astype(jnp.float32)
+        doutf = dout.astype(jnp.float32)
+        # D_i = sum_d dout * out (per row)
+        Drow = jnp.sum(doutf * out.astype(jnp.float32), axis=-1, keepdims=True)
+
+        def step(dq, ki):
+            ks = jax.lax.dynamic_slice_in_dim(k, ki * chunk, chunk, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(v, ki * chunk, chunk, axis=2)
+            s = _masked_scores(qf, ks, ki, S, kv_offset)
+            p = jnp.where(s == NEG_INF, 0.0, jnp.exp(s - jnp.where(lse == NEG_INF, 0.0, lse)))
+            dv_j = jnp.einsum("bhgst,bhgsd->bhtd", p, doutf)
+            dp = jnp.einsum("bhgsd,bhtd->bhgst", doutf, vs.astype(jnp.float32))
+            ds = p * (dp - Drow) * scale
+            dq = dq + jnp.einsum("bhgst,bhtd->bhgsd", ds, ks.astype(jnp.float32))
+            dk_j = jnp.einsum("bhgst,bhgsd->bhtd", ds, qf)
+            return dq, (dk_j, dv_j)
+
+        dq0 = jnp.zeros((B, Hkv, g, S, D), jnp.float32)
+        dq, (dk_chunks, dv_chunks) = jax.lax.scan(step, dq0, jnp.arange(nkv))
+        # (nkv, B, Hkv, chunk, D*) -> (B, Hkv, pkv, D*)
+        Dv = v.shape[-1]
+        dk = jnp.moveaxis(dk_chunks, 0, 2).reshape(B, Hkv, pkv, D)
+        dv = jnp.moveaxis(dv_chunks, 0, 2).reshape(B, Hkv, pkv, Dv)
+        return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+    core.defvjp(core_fwd, core_bwd)
+    return core
+
+
+def attention_xla_chunked(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    chunk: int = 512,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    chunk = min(chunk, Skv)
+    pkv = ((Skv + chunk - 1) // chunk) * chunk
+    if pkv != Skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pkv - Skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pkv - Skv), (0, 0)))
+    core = _chunked_attn_core(causal, float(scale), chunk, Skv)
+    qg = q.reshape(B, Hkv, group, S, D)
+    out = core(qg, k, v)
+    return out.reshape(B, Hq, S, v.shape[-1])
+
+
+def _attention_core(q, k, v, cfg, causal=True, scale=None, executor=None):
+    """Dispatch: chunked-xla override, else the registered operation."""
+    if cfg is not None and cfg.attn_impl == "chunked":
+        from repro.core.executor import current_executor
+
+        ex = executor if executor is not None else current_executor()
+        if ex.kernel_space != "pallas":
+            return attention_xla_chunked(
+                q, k, v, causal=causal, scale=scale, chunk=cfg.attn_chunk
+            )
+    return _attention_op(q, k, v, causal=causal, scale=scale, executor=executor)
+
+
+# =============================================================================
+# KV cache
+# =============================================================================
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KVCache:
+    k: jax.Array  # (B, Hkv, Smax, D)
+    v: jax.Array  # (B, Hkv, Smax, D)
+
+    @staticmethod
+    def zeros(batch, n_kv, s_max, d, dtype):
+        return KVCache(
+            k=jnp.zeros((batch, n_kv, s_max, d), dtype),
+            v=jnp.zeros((batch, n_kv, s_max, d), dtype),
+        )
+
+    def write(self, pos: jax.Array, k_new: jax.Array, v_new: jax.Array) -> "KVCache":
+        """Insert (B, Hkv, T, D) at sequence offset ``pos`` (scalar int32)."""
+        k = jax.lax.dynamic_update_slice(self.k, k_new.astype(self.k.dtype), (0, 0, pos, 0))
+        v = jax.lax.dynamic_update_slice(self.v, v_new.astype(self.v.dtype), (0, 0, pos, 0))
+        return KVCache(k, v)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, Hq, 1, D)
+    cache: KVCache,
+    length: jax.Array,  # scalar int32: number of valid positions INCLUDING current
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention against the cache (positions < length)."""
+    B, Hq, _, D = q.shape
+    Hkv = cache.k.shape[1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Hkv, group, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhtd->bhgt", qg, cache.k.astype(jnp.float32)) * scale
+    valid = jnp.arange(cache.k.shape[2])[None, None, None, :] < length
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bhtd->bhgd", p, cache.v.astype(jnp.float32))
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+# =============================================================================
+# GQA attention layer
+# =============================================================================
+
+def gqa_init(rng, cfg, *, dtype=jnp.float32):
+    d = cfg.d_model
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    pb = ParamBuilder(rng, dtype)
+    pb.param("wq", (d, H * hd), ("embed", "heads"), std=d ** -0.5)
+    pb.param("wk", (d, Hkv * hd), ("embed", "kv_heads"), std=d ** -0.5)
+    pb.param("wv", (d, Hkv * hd), ("embed", "kv_heads"), std=d ** -0.5)
+    pb.param("wo", (H * hd, d), ("heads", "embed"), std=(H * hd) ** -0.5)
+    return pb.build()
+
+
+def gqa_forward(
+    p,
+    x: jax.Array,  # (B, S, d)
+    cfg,
+    positions: jax.Array,  # (B, S) absolute positions
+    *,
+    executor=None,
+) -> jax.Array:
+    """Full (training / prefill) forward, causal."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, hd)
+    if cfg.pos_kind == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    out = _attention_core(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        cfg,
+        causal=True,
+        executor=executor,
+    )
+    return out.transpose(0, 2, 1, 3).reshape(B, S, H * hd) @ p["wo"]
+
+
+def gqa_prefill(p, x, cfg, positions, cache: KVCache, *, executor=None):
+    """Prefill: full causal forward that also fills the cache at offset 0."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, hd)
+    if cfg.pos_kind == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    kT, vT = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    out = _attention_core(
+        q.transpose(0, 2, 1, 3), kT, vT, cfg, causal=True, executor=executor
+    )
+    cache = cache.write(0, kT, vT)
+    y = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd) @ p["wo"]
+    return y, cache
+
+
+def gqa_decode(p, x, cfg, length, cache: KVCache, *, executor=None):
+    """One-token step. ``length`` = tokens already in cache (current pos)."""
+    B, S, d = x.shape  # S == 1
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    pos = jnp.full((B, 1), length, jnp.int32)
+    q = (x @ p["wq"]).reshape(B, 1, H, hd)
+    k = (x @ p["wk"]).reshape(B, 1, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, 1, Hkv, hd)
+    if cfg.pos_kind == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    cache = cache.write(length, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+    out = decode_attention(q.transpose(0, 2, 1, 3), cache, length + 1)
+    y = out.transpose(0, 2, 1, 3).reshape(B, 1, H * hd) @ p["wo"]
+    return y, cache
+
+
+# =============================================================================
+# MLA attention (MiniCPM3 / DeepSeek-style multi-head latent attention)
+# =============================================================================
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MLACache:
+    """Latent cache: compressed kv + shared rope key — the MLA memory win."""
+
+    c_kv: jax.Array  # (B, Smax, kv_lora_rank)
+    k_rope: jax.Array  # (B, Smax, qk_rope_head_dim)
+
+    @staticmethod
+    def zeros(batch, s_max, kv_rank, rope_dim, dtype):
+        return MLACache(
+            c_kv=jnp.zeros((batch, s_max, kv_rank), dtype),
+            k_rope=jnp.zeros((batch, s_max, rope_dim), dtype),
+        )
+
+    def write(self, pos, c_kv_new, k_rope_new) -> "MLACache":
+        return MLACache(
+            jax.lax.dynamic_update_slice(
+                self.c_kv, c_kv_new.astype(self.c_kv.dtype), (0, pos, 0)
+            ),
+            jax.lax.dynamic_update_slice(
+                self.k_rope, k_rope_new.astype(self.k_rope.dtype), (0, pos, 0)
+            ),
+        )
+
+
+def mla_init(rng, cfg, *, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    pb = ParamBuilder(rng, dtype)
+    pb.param("q_down", (d, qr), ("embed", None), std=d ** -0.5)
+    qp, qa = rmsnorm_init(pb.fork(), qr, dtype=dtype)
+    pb.child("q_norm", qp, qa)
+    pb.param("q_up", (qr, H * (dn + dr)), (None, "heads"), std=qr ** -0.5)
+    pb.param("kv_down", (d, kvr + dr), ("embed", None), std=d ** -0.5)
+    kvp, kva = rmsnorm_init(pb.fork(), kvr, dtype=dtype)
+    pb.child("kv_norm", kvp, kva)
+    pb.param("k_up", (kvr, H * dn), (None, "heads"), std=kvr ** -0.5)
+    pb.param("v_up", (kvr, H * dv), (None, "heads"), std=kvr ** -0.5)
+    pb.param("wo", (H * dv, d), ("heads", "embed"), std=(H * dv) ** -0.5)
+    return pb.build()
+
+
+def _mla_qkv(p, x, cfg, positions):
+    """Materialize per-head q, k, v from latents (prefill/training path)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+
+    cq = rmsnorm(p["q_norm"], x @ p["q_down"], cfg.norm_eps)
+    q = (cq @ p["q_up"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ p["kv_down"]  # (B, S, kvr + dr)
+    c_kv, k_rope = kv[..., :kvr], kv[..., kvr:]
+    c_kv_n = rmsnorm(p["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)  # shared across heads
+
+    k_nope = (c_kv_n @ p["k_up"]).reshape(B, S, H, dn)
+    v = (c_kv_n @ p["v_up"]).reshape(B, S, H, dv)
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], axis=-1
+    )
+    return q_full, k_full, v, c_kv, k_rope
+
+
+def mla_forward(p, x, cfg, positions, *, executor=None):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_full, k_full, v, _, _ = _mla_qkv(p, x, cfg, positions)
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    out = _mla_attention(q_full, k_full, v, cfg, scale, executor)
+    return out.reshape(B, S, H * dv) @ p["wo"]
+
+
+def _mla_attention(q_full, k_full, v, cfg, scale, executor):
+    """MLA core attention with dv != dqk.
+
+    The reference/chunked paths consume v at its native head dim (the softmax
+    weights only depend on q/k).  Only the Pallas flash kernel requires a
+    uniform head dim, so the pad-to-dqk/slice-back dance is confined to that
+    dispatch (a §Perf win for the portable path: padding v 64->96 cost 1.5x
+    on the PV traffic).
+    """
+    dv = v.shape[-1]
+    dqk = q_full.shape[-1]
+    from repro.core.executor import current_executor
+
+    ex = executor if executor is not None else current_executor()
+    pad_needed = ex.kernel_space == "pallas"  # flash kernel wants uniform D
+    if pad_needed and dv < dqk:
+        v_in = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dqk - dv)))
+    else:
+        v_in = v
+    out = _attention_core(
+        q_full.transpose(0, 2, 1, 3),
+        k_full.transpose(0, 2, 1, 3),
+        v_in.transpose(0, 2, 1, 3),
+        cfg,
+        causal=True,
+        scale=scale,
+        executor=executor,
+    )
+    return out.transpose(0, 2, 1, 3)[..., :dv]
+
+
+def mla_prefill(p, x, cfg, positions, cache: MLACache, *, executor=None):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_full, k_full, v, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    out = _mla_attention(q_full, k_full, v, cfg, scale, executor)
+    cache = cache.write(0, c_kv, k_rope)
+    return out.reshape(B, S, H * dv) @ p["wo"], cache
+
+
+def mla_decode(p, x, cfg, length, cache: MLACache, *, executor=None):
+    """Latent-cache decode: scores via the absorbed form (q_nope absorbed into
+    k_up) so only the (kvr + dr) latents are read per cached token."""
+    B, S, _ = x.shape  # S == 1
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    pos = jnp.full((B, 1), length, jnp.int32)
+
+    cq = rmsnorm(p["q_norm"], x @ p["q_down"], cfg.norm_eps)
+    q = (cq @ p["q_up"]).reshape(B, 1, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    kv = x @ p["kv_down"]
+    c_kv_new, k_rope_new = kv[..., :kvr], kv[..., kvr:]
+    k_rope_new = apply_rope(k_rope_new, pos, cfg.rope_theta)
+    cache = cache.write(length, c_kv_new, k_rope_new)
+
+    c_kv_n = rmsnorm(p["kv_norm"], cache.c_kv, cfg.norm_eps)  # (B, Smax, kvr)
+    # absorbed q: q_nope^T k_nope = (q_nope W_kup^T) . c_kv
+    k_up = p["k_up"].reshape(kvr, H, dn)
+    q_abs = jnp.einsum("bshd,khd->bshk", q_nope.astype(jnp.float32), k_up.astype(jnp.float32))
+    s_nope = jnp.einsum("bshk,btk->bhst", q_abs, c_kv_n.astype(jnp.float32))
+    s_rope = jnp.einsum(
+        "bshd,btd->bhst", q_rope.astype(jnp.float32), cache.k_rope.astype(jnp.float32)
+    )
+    s = (s_nope + s_rope) / ((dn + dr) ** 0.5)
+    valid = jnp.arange(cache.c_kv.shape[1])[None, None, None, :] < length + 1
+    s = jnp.where(valid, s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)  # (B, H, 1, Smax)
+    # absorbed v: out = (p . c_kv) W_vup
+    ctx = jnp.einsum("bhst,btk->bshk", pattn, c_kv_n.astype(jnp.float32))
+    v_up = p["v_up"].reshape(kvr, H, dv)
+    out = jnp.einsum("bshk,khd->bshd", ctx, v_up.astype(jnp.float32))
+    out = out.reshape(B, 1, H * dv).astype(x.dtype)
+    return out @ p["wo"], cache

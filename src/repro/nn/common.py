@@ -1,0 +1,119 @@
+"""Shared NN utilities: parameter construction with logical sharding axes.
+
+Parameters are plain pytrees (nested dicts of arrays).  Every leaf has a
+*logical axis* annotation carried in a parallel tree of tuples — e.g. a dense
+projection (d_model, d_ff) is ``("embed", "mlp")``.  The distribution layer
+(:mod:`repro.distributed.sharding`) maps logical axes onto mesh axes; models
+never name a mesh axis, the same way Ginkgo algorithms never name a backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+__all__ = [
+    "Params",
+    "Axes",
+    "ParamBuilder",
+    "truncated_normal_init",
+    "zeros_init",
+    "ones_init",
+    "cast_tree",
+]
+
+
+def truncated_normal_init(rng, shape, std, dtype):
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) * std).astype(
+        dtype
+    )
+
+
+def zeros_init(rng, shape, std, dtype):
+    del rng, std
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(rng, shape, std, dtype):
+    del rng, std
+    return jnp.ones(shape, dtype)
+
+
+class ParamBuilder:
+    """Accumulates a (params, axes) pair with auto-split rng keys.
+
+    Usage::
+
+        pb = ParamBuilder(rng, dtype=jnp.float32)
+        pb.param("wq", (d, H, hd), ("embed", "heads", "head_dim"), std=0.02)
+        sub_params, sub_axes = some_layer_init(pb.fork(), cfg)
+        pb.child("attn", sub_params, sub_axes)
+        params, axes = pb.build()
+    """
+
+    def __init__(self, rng: jax.Array, dtype=jnp.float32):
+        self._rng = rng
+        self.dtype = dtype
+        self.params: Params = {}
+        self.axes: Axes = {}
+
+    def _next_rng(self) -> jax.Array:
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    def fork(self) -> jax.Array:
+        return self._next_rng()
+
+    def param(
+        self,
+        name: str,
+        shape: Tuple[int, ...],
+        axes: Tuple[Optional[str], ...],
+        *,
+        std: Optional[float] = None,
+        init=truncated_normal_init,
+        dtype=None,
+    ):
+        if len(shape) != len(axes):
+            raise ValueError(f"{name}: shape {shape} vs axes {axes} rank mismatch")
+        if std is None:
+            std = 0.02
+        value = init(self._next_rng(), shape, std, dtype or self.dtype)
+        self.params[name] = value
+        self.axes[name] = axes
+        return value
+
+    def child(self, name: str, params: Params, axes: Axes):
+        self.params[name] = params
+        self.axes[name] = axes
+
+    def build(self) -> Tuple[Params, Axes]:
+        return self.params, self.axes
+
+
+def map_axes(fn, axes):
+    """Walk an axes tree (nested dicts with tuple/None leaves) applying fn."""
+    if isinstance(axes, dict):
+        return {k: map_axes(fn, v) for k, v in axes.items()}
+    return fn(axes)
+
+
+def stack_axes(axes, axis_name: Optional[str] = None):
+    """Prepend a (stacked-layers) axis to every leaf annotation."""
+    return map_axes(lambda t: (axis_name,) + tuple(t or ()), axes)
+
+
+def cast_tree(tree, dtype):
+    """Cast all floating-point leaves to ``dtype``."""
+    def cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(cast, tree)

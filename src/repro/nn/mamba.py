@@ -1,0 +1,172 @@
+"""Mamba2 block (SSD) — used by the zamba2 hybrid architecture.
+
+Structure follows Mamba2 (Dao & Gu 2024): input projection producing
+(z, x, B, C, dt), short causal depthwise conv over (x, B, C), SSD scan over
+heads (the registered ``nn_ssd_scan`` operation: reference/xla sequential scan,
+Pallas chunked kernel), gated RMSNorm, output projection.
+
+Decode keeps a (conv window, ssm state) recurrent state and steps in O(1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.nn.common import ParamBuilder, ones_init, zeros_init
+
+_ssd_op = registry.operation("nn_ssd_scan")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MambaState:
+    conv: jax.Array  # (B, conv_w - 1, conv_dim) rolling conv window
+    ssm: jax.Array  # (B, H, N, P) f32
+
+    @staticmethod
+    def zeros(batch, conv_w, conv_dim, n_heads, d_state, head_dim, dtype):
+        return MambaState(
+            conv=jnp.zeros((batch, conv_w - 1, conv_dim), dtype),
+            ssm=jnp.zeros((batch, n_heads, d_state, head_dim), jnp.float32),
+        )
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state
+    G = cfg.ssm_groups
+    return d, d_inner, H, P, N, G
+
+
+def mamba_init(rng, cfg, *, dtype=jnp.float32):
+    d, d_inner, H, P, N, G = _dims(cfg)
+    conv_dim = d_inner + 2 * G * N
+    pb = ParamBuilder(rng, dtype)
+    # in_proj -> [z (d_inner), x (d_inner), B (G*N), C (G*N), dt (H)]
+    pb.param(
+        "in_proj",
+        (d, 2 * d_inner + 2 * G * N + H),
+        ("embed", "mlp"),
+        std=d ** -0.5,
+    )
+    pb.param("conv_w", (cfg.ssm_conv, conv_dim), (None, "mlp"), std=0.5)
+    pb.param("conv_b", (conv_dim,), ("mlp",), init=zeros_init)
+    pb.param("dt_bias", (H,), ("heads",), init=zeros_init)
+    # A in (-exp space): A = -exp(A_log), init A ~ -1
+    pb.param("A_log", (H,), ("heads",), init=zeros_init)
+    pb.param("D", (H,), ("heads",), init=ones_init)
+    pb.param("norm_scale", (d_inner,), ("mlp",), init=ones_init)
+    pb.param("out_proj", (d_inner, d), ("mlp", "embed"), std=d_inner ** -0.5)
+    return pb.build()
+
+
+def _split_proj(proj, cfg):
+    d, d_inner, H, P, N, G = _dims(cfg)
+    z = proj[..., :d_inner]
+    x = proj[..., d_inner : 2 * d_inner]
+    Bc = proj[..., 2 * d_inner : 2 * d_inner + G * N]
+    Cc = proj[..., 2 * d_inner + G * N : 2 * d_inner + 2 * G * N]
+    dt = proj[..., 2 * d_inner + 2 * G * N :]
+    return z, x, Bc, Cc, dt
+
+
+def _gated_norm(scale, y, z, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array, prev: jax.Array):
+    """Depthwise causal conv; ``prev`` is the (conv_w-1) left context."""
+    conv_w = w.shape[0]
+    xin = jnp.concatenate([prev, xBC], axis=1)  # (B, S + cw - 1, C)
+    out = sum(
+        xin[:, i : i + xBC.shape[1], :] * w[i][None, None, :] for i in range(conv_w)
+    )
+    return jax.nn.silu(out + b), xin[:, -(conv_w - 1) :, :]
+
+
+def mamba_forward(
+    p, xin: jax.Array, cfg, state: MambaState = None, *, executor=None
+) -> Tuple[jax.Array, MambaState]:
+    B, S, _ = xin.shape
+    d, d_inner, H, P, N, G = _dims(cfg)
+    proj = xin @ p["in_proj"]
+    z, x, Bc, Cc, dt = _split_proj(proj, cfg)
+
+    xBC = jnp.concatenate([x, Bc, Cc], axis=-1)
+    prev = (
+        state.conv
+        if state is not None
+        else jnp.zeros((B, cfg.ssm_conv - 1, xBC.shape[-1]), xBC.dtype)
+    )
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], prev)
+    x, Bc, Cc = (
+        xBC[..., :d_inner],
+        xBC[..., d_inner : d_inner + G * N],
+        xBC[..., d_inner + G * N :],
+    )
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = x.reshape(B, S, H, P)
+    Bm = Bc.reshape(B, S, G, N)
+    Cm = Cc.reshape(B, S, G, N)
+
+    y, ssm_state = _ssd_op(xh, dt, A, Bm, Cm, executor=executor)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner)
+    y = _gated_norm(p["norm_scale"], y, z, cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    new_state = None
+    if state is not None:
+        new_state = MambaState(conv=conv_state, ssm=ssm_state)
+    return out, new_state
+
+
+def mamba_step(p, xin: jax.Array, cfg, state: MambaState) -> Tuple[jax.Array, MambaState]:
+    """O(1) single-token recurrence (decode)."""
+    B, _, _ = xin.shape  # (B, 1, d)
+    d, d_inner, H, P, N, G = _dims(cfg)
+    proj = xin @ p["in_proj"]
+    z, x, Bc, Cc, dt = _split_proj(proj, cfg)
+
+    xBC = jnp.concatenate([x, Bc, Cc], axis=-1)  # (B, 1, C)
+    window = jnp.concatenate([state.conv, xBC], axis=1)  # (B, cw, C)
+    conv_out = jnp.einsum("btc,tc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC1 = jax.nn.silu(conv_out)[:, None, :]
+    conv_state = window[:, 1:, :]
+
+    x1, B1, C1 = (
+        xBC1[..., :d_inner],
+        xBC1[..., d_inner : d_inner + G * N],
+        xBC1[..., d_inner + G * N :],
+    )
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))[
+        :, 0, :
+    ]  # (B, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+    xh = x1.reshape(B, H, P).astype(jnp.float32)
+    group = H // G
+    Bh = jnp.repeat(B1.reshape(B, G, N), group, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C1.reshape(B, G, N), group, axis=1).astype(jnp.float32)
+
+    decay = jnp.exp(dt1 * A[None, :])  # (B, H)
+    update = dt1[..., None, None] * Bh[..., :, None] * xh[..., None, :]
+    ssm = decay[..., None, None] * state.ssm + update
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, ssm)
+    y = y + A.dtype.type(0)  # keep f32
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, d_inner).astype(xin.dtype)
+    y = _gated_norm(p["norm_scale"], y, z, cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, MambaState(conv=conv_state, ssm=ssm)

@@ -1,0 +1,171 @@
+"""RWKV6 (Finch) blocks: time-mix (WKV attention) + channel-mix.
+
+Faithful to the Finch paper's structure (arXiv:2404.05892): token shift with
+data-dependent linear interpolation (LoRA-projected deltas), per-channel
+data-dependent decay ``w = exp(-exp(w0 + lora(x)))`` (we keep ``logw = -exp(.)``
+in log space end-to-end — see kernels/rwkv6), bonus ``u``, head-wise group
+norm, and the squared-ReLU channel mix.  The WKV recurrence is the registered
+``nn_rwkv6_scan`` operation (reference scan / xla scan / Pallas chunked kernel).
+
+Simplification noted in DESIGN.md: one shared LoRA produces the five
+interpolation deltas (r,k,v,w,g) instead of five separate LoRAs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.nn.common import ParamBuilder, zeros_init
+from repro.nn.layers import groupnorm
+
+_rwkv6_op = registry.operation("nn_rwkv6_scan")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RWKVState:
+    """Per-layer recurrent state for decode."""
+
+    wkv: jax.Array  # (B, H, K, V) WKV matrix state
+    shift_tm: jax.Array  # (B, d) previous token (time-mix)
+    shift_cm: jax.Array  # (B, d) previous token (channel-mix)
+
+    @staticmethod
+    def zeros(batch, n_heads, head_dim, d, dtype):
+        return RWKVState(
+            wkv=jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+            shift_tm=jnp.zeros((batch, d), dtype),
+            shift_cm=jnp.zeros((batch, d), dtype),
+        )
+
+
+def time_mix_init(rng, cfg, *, dtype=jnp.float32):
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_dim
+    K = cfg.rwkv_head_dim
+    r = cfg.lora_rank // 2 if cfg.lora_rank else 64
+    pb = ParamBuilder(rng, dtype)
+    # token-shift interpolation bases (five channels: r,k,v,w,g)
+    pb.param("mix_base", (5, d), (None, "embed"), std=0.02)
+    pb.param("mix_lora_a", (d, r), ("embed", None), std=d ** -0.5)
+    pb.param("mix_lora_b", (r, 5 * d), (None, "embed"), init=zeros_init)
+    # projections
+    pb.param("wr", (d, d), ("embed", "heads"), std=d ** -0.5)
+    pb.param("wk", (d, d), ("embed", "heads"), std=d ** -0.5)
+    pb.param("wv", (d, d), ("embed", "heads"), std=d ** -0.5)
+    pb.param("wg", (d, d), ("embed", "heads"), std=d ** -0.5)
+    pb.param("wo", (d, d), ("heads", "embed"), std=d ** -0.5)
+    # decay: logw = -exp(w0 + lora(x))
+    pb.param("w0", (d,), ("embed",), init=zeros_init)
+    pb.param("w_lora_a", (d, r), ("embed", None), std=d ** -0.5)
+    pb.param("w_lora_b", (r, d), (None, "embed"), init=zeros_init)
+    pb.param("u", (H, K), ("heads", None), std=0.02)
+    return pb.build()
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x[t-1] with x[-1] = prev (B, d)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mixed(p, x, xs):
+    """Data-dependent lerp between x and shifted xs for 5 channels."""
+    delta = jax.nn.tanh(x @ p["mix_lora_a"]) @ p["mix_lora_b"]  # (B,S,5d)
+    B, S, _ = x.shape
+    d = x.shape[-1]
+    mix = p["mix_base"][None, None] + delta.reshape(B, S, 5, d)  # (B,S,5,d)
+    mix = jax.nn.sigmoid(mix)
+    diff = (xs - x)[:, :, None, :]
+    out = x[:, :, None, :] + mix * diff  # (B,S,5,d)
+    return tuple(out[:, :, i, :] for i in range(5))
+
+
+def time_mix_forward(
+    p, x: jax.Array, cfg, state: RWKVState = None, *, executor=None
+) -> Tuple[jax.Array, RWKVState]:
+    """Full-sequence WKV time-mix. Returns (y, new_state or None)."""
+    B, S, d = x.shape
+    K = cfg.rwkv_head_dim
+    H = d // K
+    prev = state.shift_tm if state is not None else jnp.zeros((B, d), x.dtype)
+    xs = _token_shift(x, prev)
+    xr, xk, xv, xw, xg = _mixed(p, x, xs)
+
+    r = (xr @ p["wr"]).reshape(B, S, H, K)
+    k = (xk @ p["wk"]).reshape(B, S, H, K)
+    v = (xv @ p["wv"]).reshape(B, S, H, K)
+    g = xg @ p["wg"]
+    logw = -jnp.exp(
+        (p["w0"] + jax.nn.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+    ).reshape(B, S, H, K)
+
+    y, wkv_state = _rwkv6_op(r, k, v, logw, p["u"], executor=executor)
+    y = groupnorm(y.reshape(B, S, d), H, eps=64e-5)
+    y = y * jax.nn.silu(g)
+    out = y @ p["wo"]
+    new_state = None
+    if state is not None:
+        new_state = RWKVState(wkv=wkv_state, shift_tm=x[:, -1, :], shift_cm=state.shift_cm)
+    return out, new_state
+
+
+def time_mix_step(p, x: jax.Array, cfg, state: RWKVState) -> Tuple[jax.Array, RWKVState]:
+    """Single-token recurrent step (decode)."""
+    B, _, d = x.shape  # (B, 1, d)
+    K = cfg.rwkv_head_dim
+    H = d // K
+    xs = state.shift_tm[:, None, :]
+    xr, xk, xv, xw, xg = _mixed(p, x, xs)
+
+    r = (xr @ p["wr"]).reshape(B, H, K).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, H, K).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, H, K).astype(jnp.float32)
+    g = xg @ p["wg"]
+    logw = -jnp.exp(
+        (p["w0"] + jax.nn.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+    ).reshape(B, H, K)
+    u = p["u"].astype(jnp.float32)
+
+    kv = k[..., :, None] * v[..., None, :]  # (B,H,K,V)
+    att = state.wkv + u[None, :, :, None] * kv
+    y = jnp.einsum("bhk,bhkv->bhv", r, att)  # (B,H,V)
+    wkv = jnp.exp(logw)[..., None] * state.wkv + kv
+
+    y = groupnorm(y.reshape(B, 1, d).astype(x.dtype), H, eps=64e-5)
+    y = y * jax.nn.silu(g)
+    out = y @ p["wo"]
+    return out, RWKVState(wkv=wkv, shift_tm=x[:, -1, :], shift_cm=state.shift_cm)
+
+
+def channel_mix_init(rng, cfg, *, dtype=jnp.float32):
+    d, dff = cfg.d_model, cfg.d_ff
+    pb = ParamBuilder(rng, dtype)
+    pb.param("mix_k", (d,), ("embed",), std=0.02)
+    pb.param("mix_r", (d,), ("embed",), std=0.02)
+    pb.param("wk", (d, dff), ("embed", "mlp"), std=d ** -0.5)
+    pb.param("wv", (dff, d), ("mlp", "embed"), std=dff ** -0.5)
+    pb.param("wr", (d, d), ("embed", "embed"), std=d ** -0.5)
+    return pb.build()
+
+
+def channel_mix_forward(
+    p, x: jax.Array, cfg, state: RWKVState = None
+) -> Tuple[jax.Array, RWKVState]:
+    B, S, d = x.shape
+    prev = state.shift_cm if state is not None else jnp.zeros((B, d), x.dtype)
+    xs = _token_shift(x, prev)
+    mk = jax.nn.sigmoid(p["mix_k"])
+    mr = jax.nn.sigmoid(p["mix_r"])
+    xk = x + mk * (xs - x)
+    xr = x + mr * (xs - x)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    new_state = None
+    if state is not None:
+        new_state = RWKVState(wkv=state.wkv, shift_tm=state.shift_tm, shift_cm=x[:, -1, :])
+    return out, new_state

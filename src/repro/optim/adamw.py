@@ -1,0 +1,138 @@
+"""AdamW optimizer + LR schedules + global-norm clipping (no optax — substrate
+is built in-repo per the framework scope).
+
+Functional, optax-like contract::
+
+    opt = adamw(schedule, weight_decay=0.1, clip_norm=1.0)
+    state = opt.init(params)
+    params, state, stats = opt.update(params, grads, state)
+
+State is a registered pytree (checkpointable, shardable: moments inherit the
+parameter sharding under pjit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+# -- schedules -------------------------------------------------------------------
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(
+    peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+) -> Schedule:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return schedule
+
+
+def warmup_linear_schedule(peak_lr: float, warmup_steps: int, total_steps: int) -> Schedule:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        return jnp.where(step < warmup_steps, warm, peak_lr * (1 - prog))
+
+    return schedule
+
+
+# -- optimizer ---------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AdamWState:
+    step: jax.Array  # scalar int32
+    mu: Any  # first moment (params-shaped)
+    nu: Any  # second moment (params-shaped)
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], AdamWState]
+    update: Callable[..., Tuple[Any, AdamWState, Dict[str, jax.Array]]]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+def adamw(
+    schedule: Schedule,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: Optional[float] = 1.0,
+    moment_dtype=jnp.float32,
+) -> Optimizer:
+    def init(params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(params, grads, state: AdamWState):
+        stats: Dict[str, jax.Array] = {}
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        stats["grad_norm"] = gnorm
+
+        step = state.step + 1
+        lr = schedule(step)
+        stats["lr"] = lr
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(moment_dtype)
+            mu = b1 * mu + (1 - b1) * g32
+            nu = b2 * nu + (1 - b2) * jnp.square(g32)
+            mu_hat = mu / bc1
+            nu_hat = nu / bc2
+            step_val = mu_hat / (jnp.sqrt(nu_hat) + eps) + weight_decay * p.astype(
+                moment_dtype
+            )
+            return (p.astype(moment_dtype) - lr * step_val).astype(p.dtype), mu, nu
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_mu = treedef.flatten_up_to(state.mu)
+        flat_nu = treedef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_mu = treedef.unflatten([o[1] for o in out])
+        new_nu = treedef.unflatten([o[2] for o in out])
+        stats["param_norm"] = global_norm(new_p)
+        return new_p, AdamWState(step=step, mu=new_mu, nu=new_nu), stats
+
+    return Optimizer(init=init, update=update)

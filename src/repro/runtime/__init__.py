@@ -1,0 +1,9 @@
+"""repro.runtime — fault tolerance: preemption, stragglers, restarts."""
+
+from repro.runtime.fault_tolerance import (
+    PreemptionHandler,
+    StragglerMonitor,
+    run_with_restarts,
+)
+
+__all__ = ["PreemptionHandler", "StragglerMonitor", "run_with_restarts"]

@@ -1,0 +1,29 @@
+"""repro.solvers — Krylov subspace solvers (Ginkgo's solver set), executor-agnostic."""
+
+from repro.solvers.common import (
+    LinearOperator,
+    block_jacobi_preconditioner,
+    SolveResult,
+    Stop,
+    identity_preconditioner,
+    jacobi_preconditioner,
+)
+from repro.solvers.krylov import bicgstab, cg, cgs, fcg, gmres
+from repro.solvers.parilu import parilu_factorize, parilu_preconditioner, parilu_setup
+
+__all__ = [
+    "LinearOperator",
+    "SolveResult",
+    "Stop",
+    "jacobi_preconditioner",
+    "block_jacobi_preconditioner",
+    "identity_preconditioner",
+    "cg",
+    "fcg",
+    "bicgstab",
+    "cgs",
+    "gmres",
+    "parilu_factorize",
+    "parilu_preconditioner",
+    "parilu_setup",
+]

@@ -1,0 +1,181 @@
+"""Shared solver machinery: LinearOperator, results, stopping criteria.
+
+Solvers are written against executor-dispatched BLAS-1/SpMV operations and
+``jax.lax`` control flow only, so one solver source serves every executor
+(the paper's separation of algorithm from kernels) and distributes under
+``pjit`` by sharding the operands (dots become global collectives under GSPMD).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro import sparse
+from repro.sparse.formats import Coo, Csr, Dense, Ell, Sellp
+from repro.core import registry
+
+MatrixLike = Union[Coo, Csr, Ell, Sellp, Dense, Callable[[jax.Array], jax.Array]]
+
+__all__ = [
+    "LinearOperator",
+    "SolveResult",
+    "Stop",
+    "jacobi_preconditioner",
+    "identity_preconditioner",
+]
+
+
+class LinearOperator:
+    """gko::LinOp analogue: anything that can apply() to a vector."""
+
+    def __init__(self, A: MatrixLike, executor=None):
+        self.A = A
+        self.executor = executor
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        if callable(self.A) and not hasattr(self.A, "values"):
+            return self.A(x)
+        return sparse.apply(self.A, x, executor=self.executor)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    x: jax.Array
+    iterations: jax.Array  # int32
+    residual_norm: jax.Array
+    converged: jax.Array  # bool
+
+
+@dataclasses.dataclass(frozen=True)
+class Stop:
+    """Combined stopping criterion (gko::stop::Combined).
+
+    Converged when ||r|| <= max(reduction_factor * ||b||, abs_tol), or stopped
+    when iterations reach max_iters.
+    """
+
+    max_iters: int = 1000
+    reduction_factor: float = 1e-6
+    abs_tol: float = 0.0
+
+    def threshold(self, bnorm: jax.Array) -> jax.Array:
+        return jnp.maximum(self.reduction_factor * bnorm, self.abs_tol)
+
+
+# -- preconditioners -----------------------------------------------------------
+
+extract_diag_op = registry.operation("extract_diagonal")
+
+
+@extract_diag_op.register("reference")
+def _extract_diag_ref(ex, A):
+    if isinstance(A, Dense):
+        return jnp.diagonal(A.values)
+    if isinstance(A, Csr):
+        nnz = A.values.shape[0]
+        rows = (
+            jnp.searchsorted(A.indptr, jnp.arange(nnz, dtype=jnp.int32), side="right")
+            - 1
+        )
+        n = min(A.shape)
+        hit = (rows == A.indices) & (rows < n)
+        return jnp.zeros(n, A.values.dtype).at[jnp.where(hit, rows, 0)].add(
+            jnp.where(hit, A.values, 0.0)
+        )
+    if isinstance(A, Coo):
+        n = min(A.shape)
+        hit = A.row_idx == A.col_idx
+        return jnp.zeros(n, A.values.dtype).at[jnp.where(hit, A.row_idx, 0)].add(
+            jnp.where(hit, A.values, 0.0)
+        )
+    if isinstance(A, Ell):
+        m, k = A.values.shape
+        rows = jnp.broadcast_to(jnp.arange(m)[:, None], (m, k))
+        hit = A.col_idx == rows
+        return jnp.sum(jnp.where(hit, A.values, 0.0), axis=1)[: min(A.shape)]
+    # Fallback (Sellp): densify — reference semantics are allowed to be slow.
+    return jnp.diagonal(sparse.to_dense(A, executor=ex))
+
+
+@extract_diag_op.register("xla")
+def _extract_diag_xla(ex, A):
+    return _extract_diag_ref(ex, A)
+
+
+def jacobi_preconditioner(A: MatrixLike, executor=None) -> Callable:
+    """Scalar Jacobi: M^{-1} v = v / diag(A) (gko::preconditioner::Jacobi, bs=1)."""
+    d = extract_diag_op(A, executor=executor)
+    safe = jnp.where(jnp.abs(d) > 0, d, jnp.ones_like(d))
+    inv = jnp.where(jnp.abs(d) > 0, 1.0 / safe, jnp.ones_like(d))
+
+    def apply_m(v: jax.Array) -> jax.Array:
+        return inv * v
+
+    return apply_m
+
+
+extract_diag_blocks_op = registry.operation("extract_diag_blocks")
+
+
+@extract_diag_blocks_op.register("reference")
+def _extract_blocks_ref(ex, A, block_size: int):
+    """(nblocks, bs, bs) diagonal blocks; trailing block zero-padded.
+
+    Reference semantics densify (correct for every format); a format-aware
+    gather is the natural optimization for huge systems.
+    """
+    dense = sparse.to_dense(A, executor=ex)
+    n = dense.shape[0]
+    nb = -(-n // block_size)
+    pad = nb * block_size - n
+    if pad:
+        dense = jnp.pad(dense, ((0, pad), (0, pad)))
+    rows = dense.reshape(nb, block_size, nb * block_size)
+    blocks = jnp.stack(
+        [jax.lax.dynamic_slice_in_dim(rows[i], i * block_size, block_size, axis=1)
+         for i in range(nb)]
+    )
+    return blocks
+
+
+@extract_diag_blocks_op.register("xla")
+def _extract_blocks_xla(ex, A, block_size: int):
+    return _extract_blocks_ref(ex, A, block_size)
+
+
+def block_jacobi_preconditioner(
+    A: MatrixLike, block_size: int = 4, executor=None
+) -> Callable:
+    """Block-Jacobi (gko::preconditioner::Jacobi with block size > 1):
+    M^{-1} = blockdiag(A_11^{-1}, A_22^{-1}, ...) — Ginkgo's flagship
+    preconditioner for the solver benchmarks.
+
+    Singular/padded blocks fall back to identity on their zero rows via a
+    diagonal ridge before inversion.
+    """
+    n = A.shape[0] if hasattr(A, "shape") else A.values.shape[0]
+    blocks = extract_diag_blocks_op(A, block_size, executor=executor)
+    nb = blocks.shape[0]
+    # regularize zero diagonal entries (padding / structurally empty rows)
+    diag = jnp.diagonal(blocks, axis1=1, axis2=2)
+    ridge = jnp.where(jnp.abs(diag) > 0, 0.0, 1.0)
+    blocks = blocks + jax.vmap(jnp.diag)(ridge)
+    inv_blocks = jnp.linalg.inv(blocks)  # (nb, bs, bs)
+
+    def apply_m(v: jax.Array) -> jax.Array:
+        pad = nb * block_size - v.shape[0]
+        vp = jnp.pad(v, (0, pad)) if pad else v
+        y = jnp.einsum("bij,bj->bi", inv_blocks, vp.reshape(nb, block_size))
+        return y.reshape(-1)[: v.shape[0]]
+
+    return apply_m
+
+
+def identity_preconditioner(v: jax.Array) -> jax.Array:
+    return v

@@ -1,0 +1,323 @@
+"""Krylov solvers: CG, FCG, BiCGSTAB, GMRES(m) — Ginkgo's solver set.
+
+All solvers:
+
+* are pure-functional and jittable (``lax.while_loop`` / ``lax.fori_loop``);
+* perform every vector operation through executor-dispatched BLAS-1 /
+  SpMV kernels (:mod:`repro.sparse.ops`) — the algorithm never names a backend;
+* distribute under ``pjit`` by sharding A (rows) and the vectors; the dot
+  products lower to global all-reduces under GSPMD.
+
+Precision note: the paper evaluates in IEEE754 double precision; on this CPU
+container f64 requires ``jax_enable_x64``.  Solvers are dtype-polymorphic —
+benchmarks run f32 by default and f64 under ``with jax.experimental.enable_x64()``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.solvers.common import (
+    LinearOperator,
+    MatrixLike,
+    SolveResult,
+    Stop,
+    identity_preconditioner,
+)
+from repro.sparse import ops as blas
+
+__all__ = ["cg", "fcg", "bicgstab", "cgs", "gmres"]
+
+
+def _setup(A, b, x0, M, executor):
+    op = LinearOperator(A, executor=executor)
+    x = jnp.zeros_like(b) if x0 is None else x0
+    M = M or identity_preconditioner
+    return op, x, M
+
+
+def cg(
+    A: MatrixLike,
+    b: jax.Array,
+    x0: Optional[jax.Array] = None,
+    *,
+    stop: Stop = Stop(),
+    M: Optional[Callable] = None,
+    executor=None,
+) -> SolveResult:
+    """Preconditioned conjugate gradient (SPD systems)."""
+    op, x, M = _setup(A, b, x0, M, executor)
+    ex = executor
+    bnorm = blas.norm2(b, executor=ex)
+    thresh = stop.threshold(bnorm)
+
+    r = b - op(x)
+    z = M(r)
+    p = z
+    rz = blas.dot(r, z, executor=ex)
+
+    def cond(state):
+        x, r, z, p, rz, k, rnorm = state
+        return (rnorm > thresh) & (k < stop.max_iters)
+
+    def body(state):
+        x, r, z, p, rz, k, _ = state
+        Ap = op(p)
+        alpha = rz / blas.dot(p, Ap, executor=ex)
+        x = blas.axpy(alpha, p, x, executor=ex)
+        r = blas.axpy(-alpha, Ap, r, executor=ex)
+        z = M(r)
+        rz_new = blas.dot(r, z, executor=ex)
+        beta = rz_new / rz
+        p = blas.axpy(beta, p, z, executor=ex)
+        return x, r, z, p, rz_new, k + 1, blas.norm2(r, executor=ex)
+
+    state = (x, r, z, p, rz, jnp.int32(0), blas.norm2(r, executor=ex))
+    x, r, z, p, rz, k, rnorm = jax.lax.while_loop(cond, body, state)
+    return SolveResult(x, k, rnorm, rnorm <= thresh)
+
+
+def fcg(
+    A: MatrixLike,
+    b: jax.Array,
+    x0: Optional[jax.Array] = None,
+    *,
+    stop: Stop = Stop(),
+    M: Optional[Callable] = None,
+    executor=None,
+) -> SolveResult:
+    """Flexible CG (Ginkgo's FCG): Polak–Ribière beta = r'(r - r_prev)/rz_prev,
+    robust to non-constant preconditioners."""
+    op, x, M = _setup(A, b, x0, M, executor)
+    ex = executor
+    bnorm = blas.norm2(b, executor=ex)
+    thresh = stop.threshold(bnorm)
+
+    r = b - op(x)
+    z = M(r)
+    p = z
+    rz = blas.dot(r, z, executor=ex)
+
+    def cond(state):
+        *_, k, rnorm = state
+        return (rnorm > thresh) & (k < stop.max_iters)
+
+    def body(state):
+        x, r, r_prev, z, p, rz, k, _ = state
+        Ap = op(p)
+        alpha = rz / blas.dot(p, Ap, executor=ex)
+        x = blas.axpy(alpha, p, x, executor=ex)
+        r_new = blas.axpy(-alpha, Ap, r, executor=ex)
+        z = M(r_new)
+        # flexible beta uses the difference with the previous residual
+        rz_new = blas.dot(r_new, z, executor=ex)
+        beta = blas.dot(z, r_new - r, executor=ex) / rz
+        p = blas.axpy(beta, p, z, executor=ex)
+        return x, r_new, r, z, p, rz_new, k + 1, blas.norm2(r_new, executor=ex)
+
+    state = (x, r, r, z, p, rz, jnp.int32(0), blas.norm2(r, executor=ex))
+    out = jax.lax.while_loop(cond, body, state)
+    x, r, r_prev, z, p, rz, k, rnorm = out
+    return SolveResult(x, k, rnorm, rnorm <= thresh)
+
+
+def bicgstab(
+    A: MatrixLike,
+    b: jax.Array,
+    x0: Optional[jax.Array] = None,
+    *,
+    stop: Stop = Stop(),
+    M: Optional[Callable] = None,
+    executor=None,
+) -> SolveResult:
+    """Preconditioned BiCGSTAB (general nonsymmetric systems)."""
+    op, x, M = _setup(A, b, x0, M, executor)
+    ex = executor
+    bnorm = blas.norm2(b, executor=ex)
+    thresh = stop.threshold(bnorm)
+    eps = jnp.asarray(1e-30, b.dtype)
+
+    r = b - op(x)
+    r_hat = r
+    rho = blas.dot(r_hat, r, executor=ex)
+    p = r
+
+    def cond(state):
+        x, r, p, rho, k, rnorm = state
+        return (rnorm > thresh) & (k < stop.max_iters)
+
+    def body(state):
+        x, r, p, rho, k, _ = state
+        p_hat = M(p)
+        v = op(p_hat)
+        alpha = rho / (blas.dot(r_hat, v, executor=ex) + eps)
+        s = blas.axpy(-alpha, v, r, executor=ex)
+        s_hat = M(s)
+        t = op(s_hat)
+        omega = blas.dot(t, s, executor=ex) / (blas.dot(t, t, executor=ex) + eps)
+        x = x + alpha * p_hat + omega * s_hat
+        r_new = blas.axpy(-omega, t, s, executor=ex)
+        rho_new = blas.dot(r_hat, r_new, executor=ex)
+        beta = (rho_new / (rho + eps)) * (alpha / (omega + eps))
+        p = r_new + beta * (p - omega * v)
+        return x, r_new, p, rho_new, k + 1, blas.norm2(r_new, executor=ex)
+
+    state = (x, r, p, rho, jnp.int32(0), blas.norm2(r, executor=ex))
+    x, r, p, rho, k, rnorm = jax.lax.while_loop(cond, body, state)
+    return SolveResult(x, k, rnorm, rnorm <= thresh)
+
+
+def cgs(
+    A: MatrixLike,
+    b: jax.Array,
+    x0: Optional[jax.Array] = None,
+    *,
+    stop: Stop = Stop(),
+    M: Optional[Callable] = None,
+    executor=None,
+) -> SolveResult:
+    """Conjugate Gradient Squared (Sonneveld) — the paper's solver set's
+    transpose-free nonsymmetric method."""
+    op, x, M = _setup(A, b, x0, M, executor)
+    ex = executor
+    bnorm = blas.norm2(b, executor=ex)
+    thresh = stop.threshold(bnorm)
+    eps = jnp.asarray(1e-30, b.dtype)
+
+    r = b - op(x)
+    r_hat = r
+    rho = blas.dot(r_hat, r, executor=ex)
+    u = r
+    p = r
+
+    def cond(state):
+        *_, k, rnorm = state
+        return (rnorm > thresh) & (k < stop.max_iters)
+
+    def body(state):
+        x, r, u, p, rho, k, _ = state
+        p_hat = M(p)
+        v = op(p_hat)
+        alpha = rho / (blas.dot(r_hat, v, executor=ex) + eps)
+        q = u - alpha * v
+        uq_hat = M(u + q)
+        x = x + alpha * uq_hat
+        r = r - alpha * op(uq_hat)
+        rho_new = blas.dot(r_hat, r, executor=ex)
+        beta = rho_new / (rho + eps)
+        u = r + beta * q
+        p = u + beta * (q + beta * p)
+        return x, r, u, p, rho_new, k + 1, blas.norm2(r, executor=ex)
+
+    state = (x, r, u, p, rho, jnp.int32(0), blas.norm2(r, executor=ex))
+    x, r, u, p, rho, k, rnorm = jax.lax.while_loop(cond, body, state)
+    return SolveResult(x, k, rnorm, rnorm <= thresh)
+
+
+def gmres(
+    A: MatrixLike,
+    b: jax.Array,
+    x0: Optional[jax.Array] = None,
+    *,
+    restart: int = 30,
+    stop: Stop = Stop(),
+    M: Optional[Callable] = None,
+    executor=None,
+) -> SolveResult:
+    """Restarted GMRES(m) with modified Gram-Schmidt Arnoldi + Givens rotations.
+
+    Right-preconditioned: solves A M^{-1} u = b, x = M^{-1} u, so the true
+    residual is available without extra applies.
+    """
+    op, x, M = _setup(A, b, x0, M, executor)
+    ex = executor
+    n = b.shape[0]
+    m = restart
+    dtype = b.dtype
+    bnorm = blas.norm2(b, executor=ex)
+    thresh = stop.threshold(bnorm)
+    eps = jnp.asarray(1e-30, dtype)
+
+    def arnoldi_cycle(x):
+        """One restart cycle. Returns (x_new, rnorm_new)."""
+        r = b - op(x)
+        beta = blas.norm2(r, executor=ex)
+        V = jnp.zeros((m + 1, n), dtype)
+        V = V.at[0].set(r / (beta + eps))
+        H = jnp.zeros((m + 1, m), dtype)
+        # Givens coefficients and the rotated rhs g
+        cs = jnp.zeros(m, dtype)
+        sn = jnp.zeros(m, dtype)
+        g = jnp.zeros(m + 1, dtype).at[0].set(beta)
+
+        def step(j, carry):
+            V, H, cs, sn, g, done = carry
+            w = op(M(V[j]))
+            # modified Gram-Schmidt against all m+1 basis vectors; rows > j are
+            # zero so the extra dots are no-ops (keeps shapes static).
+            def mgs(i, wh):
+                w, h = wh
+                hij = jnp.where(i <= j, blas.dot(V[i], w, executor=ex), 0.0)
+                w = w - hij * V[i]
+                return w, h.at[i].set(hij)
+
+            w, hcol = jax.lax.fori_loop(0, m + 1, mgs, (w, jnp.zeros(m + 1, dtype)))
+            hj1 = blas.norm2(w, executor=ex)
+            hcol = hcol.at[j + 1].set(hj1)
+            V = V.at[j + 1].set(w / (hj1 + eps))
+
+            # apply existing Givens rotations to the new column
+            def rot(i, h):
+                hi = cs[i] * h[i] + sn[i] * h[i + 1]
+                hi1 = -sn[i] * h[i] + cs[i] * h[i + 1]
+                h = h.at[i].set(jnp.where(i < j, hi, h[i]))
+                return h.at[i + 1].set(jnp.where(i < j, hi1, h[i + 1]))
+
+            hcol = jax.lax.fori_loop(0, m, rot, hcol)
+
+            # new rotation to zero hcol[j+1]
+            denom = jnp.sqrt(hcol[j] ** 2 + hcol[j + 1] ** 2) + eps
+            c, s = hcol[j] / denom, hcol[j + 1] / denom
+            hcol = hcol.at[j].set(c * hcol[j] + s * hcol[j + 1]).at[j + 1].set(0.0)
+            cs = cs.at[j].set(c)
+            sn = sn.at[j].set(s)
+            g_j1 = -s * g[j]
+            g = g.at[j + 1].set(g_j1).at[j].set(c * g[j])
+
+            H = H.at[:, j].set(hcol)
+            done = done | (jnp.abs(g_j1) <= thresh)
+            return V, H, cs, sn, g, done
+
+        # run all m steps (static shape); 'done' only gates the outer loop —
+        # redundant inner steps are numerically harmless (rotations freeze g).
+        V, H, cs, sn, g, done = jax.lax.fori_loop(
+            0, m, step, (V, H, cs, sn, g, jnp.asarray(False))
+        )
+
+        # back-substitution on the m×m triangular system H y = g
+        def back(i_rev, y):
+            i = m - 1 - i_rev
+            num = g[i] - jnp.dot(H[i, :], y)
+            return y.at[i].set(num / (H[i, i] + eps))
+
+        y = jax.lax.fori_loop(0, m, back, jnp.zeros(m, dtype))
+        dx = V[:m].T @ y
+        x_new = x + M(dx)
+        rnorm = blas.norm2(b - op(x_new), executor=ex)
+        return x_new, rnorm
+
+    def cond(state):
+        x, k, rnorm = state
+        return (rnorm > thresh) & (k < stop.max_iters)
+
+    def body(state):
+        x, k, _ = state
+        x, rnorm = arnoldi_cycle(x)
+        return x, k + m, rnorm
+
+    r0 = blas.norm2(b - op(x), executor=ex)
+    x, k, rnorm = jax.lax.while_loop(cond, body, (x, jnp.int32(0), r0))
+    return SolveResult(x, k, rnorm, rnorm <= thresh)

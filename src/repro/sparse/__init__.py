@@ -1,0 +1,38 @@
+"""repro.sparse — Ginkgo's sparse formats and SpMV, executor-dispatched."""
+
+from repro.sparse.formats import (
+    Coo,
+    Csr,
+    Dense,
+    Ell,
+    Sellp,
+    coo_from_dense,
+    csr_from_arrays,
+    csr_from_dense,
+    ell_from_csr_host,
+    ell_from_dense,
+    sellp_from_csr_host,
+    sellp_from_dense,
+)
+from repro.sparse.ops import apply, axpy, dot, norm2, scal, to_dense
+
+__all__ = [
+    "Coo",
+    "Csr",
+    "Dense",
+    "Ell",
+    "Sellp",
+    "coo_from_dense",
+    "csr_from_dense",
+    "csr_from_arrays",
+    "ell_from_dense",
+    "ell_from_csr_host",
+    "sellp_from_dense",
+    "sellp_from_csr_host",
+    "apply",
+    "to_dense",
+    "dot",
+    "axpy",
+    "scal",
+    "norm2",
+]

@@ -1,0 +1,296 @@
+"""Sparse matrix formats — COO, CSR, ELL, SELL-P (Ginkgo's format set).
+
+Each format is a frozen JAX pytree (device arrays + static metadata) so it can
+flow through ``jit`` / ``pjit`` and be sharded.  Construction/conversion happens
+host-side in numpy (setup time, like Ginkgo's ``convert_to``); the `apply`
+(SpMV) path is executor-dispatched (see :mod:`repro.sparse.ops`).
+
+TPU adaptations (DESIGN.md §2):
+
+* ELL stores row-major ``(m, max_nnz)`` blocks; padding uses column 0 with a
+  zero value so gathers stay in-bounds without predication.
+* SELL-P uses slice size ``C = 8`` (one sublane) by default instead of
+  Ginkgo's GPU default 64, and pads each slice's column count to a multiple of
+  ``stride_factor`` so slice-local blocks stay vector-aligned.  Values are laid
+  out per-slice column-major — ``(cols_in_slice, C)`` contiguous per slice —
+  exactly Ginkgo's layout, flattened into one buffer with ``slice_sets``
+  offsets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Coo", "Csr", "Ell", "Sellp", "Dense"]
+
+
+def _register(cls, data_fields, meta_fields):
+    jax.tree_util.register_dataclass(
+        cls, data_fields=list(data_fields), meta_fields=list(meta_fields)
+    )
+    return cls
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    """Row-major dense matrix (gko::matrix::Dense)."""
+
+    values: jax.Array  # (m, n)
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.values.shape
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+
+_register(Dense, ["values"], [])
+
+
+@dataclasses.dataclass(frozen=True)
+class Coo:
+    """Coordinate format; row indices kept sorted (Ginkgo requires sorted COO)."""
+
+    row_idx: jax.Array  # (nnz,) int32, sorted
+    col_idx: jax.Array  # (nnz,) int32
+    values: jax.Array  # (nnz,)
+    shape: Tuple[int, int]  # static
+
+    @property
+    def nnz(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+
+_register(Coo, ["row_idx", "col_idx", "values"], ["shape"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Csr:
+    """Compressed sparse row."""
+
+    indptr: jax.Array  # (m+1,) int32
+    indices: jax.Array  # (nnz,) int32
+    values: jax.Array  # (nnz,)
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+
+_register(Csr, ["indptr", "indices", "values"], ["shape"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Ell:
+    """ELLPACK: fixed ``max_nnz`` entries per row, zero-padded.
+
+    Padding entries have ``col_idx == 0`` and ``value == 0`` (in-bounds gather,
+    zero contribution) — the predication-free TPU idiom.
+    """
+
+    col_idx: jax.Array  # (m, max_nnz) int32
+    values: jax.Array  # (m, max_nnz)
+    shape: Tuple[int, int]
+
+    @property
+    def max_nnz(self) -> int:
+        return self.values.shape[1]
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+
+_register(Ell, ["col_idx", "values"], ["shape"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Sellp:
+    """SELL-P (sliced ELL with padding) — Ginkgo's GPU throughput format.
+
+    Rows are grouped into slices of ``slice_size`` (C).  Each slice stores its
+    own padded column count (a multiple of ``stride_factor``); slice ``i``'s
+    values occupy ``slice_sets[i]*C : slice_sets[i+1]*C`` of the flat buffers,
+    laid out column-major within the slice (column-contiguous groups of C).
+
+    ``slice_cols`` (static-shaped device array) and ``slice_sets`` are part of
+    the pytree; ``max_slice_cols`` is static so Pallas grids can size to it.
+    """
+
+    col_idx: jax.Array  # (total_padded_nnz,) int32
+    values: jax.Array  # (total_padded_nnz,)
+    slice_sets: jax.Array  # (num_slices+1,) int32 — column offsets per slice
+    slice_cols: jax.Array  # (num_slices,) int32 — padded cols per slice
+    shape: Tuple[int, int]
+    slice_size: int  # static (C)
+    stride_factor: int  # static
+    max_slice_cols: int  # static — max(slice_cols), for grid sizing
+
+    @property
+    def num_slices(self) -> int:
+        return self.slice_cols.shape[0]
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+
+_register(
+    Sellp,
+    ["col_idx", "values", "slice_sets", "slice_cols"],
+    ["shape", "slice_size", "stride_factor", "max_slice_cols"],
+)
+
+
+# -- host-side constructors (setup-time, numpy) --------------------------------
+
+
+def coo_from_dense(a: np.ndarray, dtype=None) -> Coo:
+    a = np.asarray(a)
+    r, c = np.nonzero(a)
+    order = np.lexsort((c, r))
+    r, c = r[order], c[order]
+    v = a[r, c]
+    return Coo(
+        row_idx=jnp.asarray(r, jnp.int32),
+        col_idx=jnp.asarray(c, jnp.int32),
+        values=jnp.asarray(v, dtype or a.dtype),
+        shape=a.shape,
+    )
+
+
+def csr_from_dense(a: np.ndarray, dtype=None) -> Csr:
+    a = np.asarray(a)
+    m = a.shape[0]
+    r, c = np.nonzero(a)
+    order = np.lexsort((c, r))
+    r, c = r[order], c[order]
+    v = a[r, c]
+    indptr = np.zeros(m + 1, np.int32)
+    np.add.at(indptr, r + 1, 1)
+    indptr = np.cumsum(indptr).astype(np.int32)
+    return Csr(
+        indptr=jnp.asarray(indptr),
+        indices=jnp.asarray(c, jnp.int32),
+        values=jnp.asarray(v, dtype or a.dtype),
+        shape=a.shape,
+    )
+
+
+def csr_from_arrays(indptr, indices, values, shape) -> Csr:
+    return Csr(
+        indptr=jnp.asarray(indptr, jnp.int32),
+        indices=jnp.asarray(indices, jnp.int32),
+        values=jnp.asarray(values),
+        shape=tuple(shape),
+    )
+
+
+def ell_from_csr_host(indptr, indices, values, shape, max_nnz=None) -> Ell:
+    """Host-side CSR -> ELL."""
+    indptr = np.asarray(indptr)
+    indices = np.asarray(indices)
+    values = np.asarray(values)
+    m, _ = shape
+    row_nnz = np.diff(indptr)
+    k = int(max_nnz if max_nnz is not None else (row_nnz.max() if m else 0))
+    k = max(k, 1)
+    cols = np.zeros((m, k), np.int32)
+    vals = np.zeros((m, k), values.dtype)
+    for i in range(m):
+        n = row_nnz[i]
+        if n > k:
+            raise ValueError(f"row {i} has {n} nnz > max_nnz {k}")
+        cols[i, :n] = indices[indptr[i] : indptr[i] + n]
+        vals[i, :n] = values[indptr[i] : indptr[i] + n]
+    return Ell(jnp.asarray(cols), jnp.asarray(vals), tuple(shape))
+
+
+def ell_from_dense(a: np.ndarray, dtype=None) -> Ell:
+    c = csr_from_dense(a, dtype)
+    return ell_from_csr_host(
+        np.asarray(c.indptr), np.asarray(c.indices), np.asarray(c.values), c.shape
+    )
+
+
+def sellp_from_csr_host(
+    indptr,
+    indices,
+    values,
+    shape,
+    slice_size: int = 8,
+    stride_factor: int = 8,
+) -> Sellp:
+    """Host-side CSR -> SELL-P with Ginkgo's slice layout."""
+    indptr = np.asarray(indptr)
+    indices = np.asarray(indices)
+    values = np.asarray(values)
+    m, _ = shape
+    C = slice_size
+    num_slices = max((m + C - 1) // C, 1)
+    row_nnz = np.diff(indptr) if m else np.zeros(0, np.int64)
+
+    slice_cols = np.zeros(num_slices, np.int32)
+    for s in range(num_slices):
+        rows = row_nnz[s * C : min((s + 1) * C, m)]
+        w = int(rows.max()) if rows.size else 0
+        # pad to stride_factor (Ginkgo's stride alignment), at least one column
+        w = max(w, 1)
+        slice_cols[s] = ((w + stride_factor - 1) // stride_factor) * stride_factor
+
+    slice_sets = np.zeros(num_slices + 1, np.int32)
+    slice_sets[1:] = np.cumsum(slice_cols)
+    total = int(slice_sets[-1]) * C
+
+    cols = np.zeros(total, np.int32)
+    vals = np.zeros(total, values.dtype)
+    for s in range(num_slices):
+        base = slice_sets[s] * C
+        for r in range(C):
+            row = s * C + r
+            if row >= m:
+                continue
+            n = row_nnz[row]
+            src = slice(indptr[row], indptr[row] + n)
+            # column-major within slice: entry (col j, row r) at base + j*C + r
+            dst = base + np.arange(n) * C + r
+            cols[dst] = indices[src]
+            vals[dst] = values[src]
+    return Sellp(
+        col_idx=jnp.asarray(cols),
+        values=jnp.asarray(vals),
+        slice_sets=jnp.asarray(slice_sets),
+        slice_cols=jnp.asarray(slice_cols),
+        shape=tuple(shape),
+        slice_size=C,
+        stride_factor=stride_factor,
+        max_slice_cols=int(slice_cols.max()) if num_slices else 1,
+    )
+
+
+def sellp_from_dense(a: np.ndarray, slice_size=8, stride_factor=8) -> Sellp:
+    c = csr_from_dense(a)
+    return sellp_from_csr_host(
+        np.asarray(c.indptr),
+        np.asarray(c.indices),
+        np.asarray(c.values),
+        c.shape,
+        slice_size=slice_size,
+        stride_factor=stride_factor,
+    )

@@ -1,0 +1,294 @@
+"""Executor-dispatched sparse operations (SpMV per format) + BLAS-1 kernels.
+
+Reference space = sequential-semantics oracle (straightforward scatter/gather).
+XLA space       = segment-sum / one-shot vectorized formulations the compiler
+                  can fuse (Ginkgo's "OpenMP" slot).
+Pallas space    = registered from ``repro.kernels.spmv_sellp`` / ``..._ell``
+                  (hardware-native; imported lazily by ``repro.kernels``).
+
+``apply(A, x)`` mirrors ``gko::LinOp::apply`` — dispatch on format type, then on
+executor kernel space.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.sparse.formats import Coo, Csr, Dense, Ell, Sellp
+
+__all__ = ["apply", "to_dense", "dot", "axpy", "scal", "norm2"]
+
+# =============================================================================
+# SpMV — COO
+# =============================================================================
+
+spmv_coo = registry.operation(
+    "spmv_coo", "y = A @ x for sorted COO (scatter-add semantics)"
+)
+
+
+@spmv_coo.register("reference")
+def _spmv_coo_ref(ex, A: Coo, x: jax.Array) -> jax.Array:
+    m = A.shape[0]
+    y = jnp.zeros((m,) + x.shape[1:], dtype=jnp.result_type(A.values, x))
+    contrib = A.values[:, None] * x[A.col_idx] if x.ndim == 2 else A.values * x[A.col_idx]
+    return y.at[A.row_idx].add(contrib)
+
+
+@spmv_coo.register("xla")
+def _spmv_coo_xla(ex, A: Coo, x: jax.Array) -> jax.Array:
+    # segment-sum over sorted rows; indices_are_sorted lets XLA lower a
+    # contiguous scatter (the TPU-friendly form of the paper's COO kernel,
+    # which on GPUs uses atomicAdd — no TPU analogue, see DESIGN.md).
+    contrib = A.values[:, None] * x[A.col_idx] if x.ndim == 2 else A.values * x[A.col_idx]
+    return jax.ops.segment_sum(
+        contrib, A.row_idx, num_segments=A.shape[0], indices_are_sorted=True
+    )
+
+
+# =============================================================================
+# SpMV — CSR
+# =============================================================================
+
+spmv_csr = registry.operation("spmv_csr", "y = A @ x for CSR")
+
+
+def _csr_row_ids(A: Csr) -> jax.Array:
+    nnz = A.values.shape[0]
+    return (
+        jnp.searchsorted(A.indptr, jnp.arange(nnz, dtype=jnp.int32), side="right")
+        .astype(jnp.int32)
+        - 1
+    )
+
+
+@spmv_csr.register("reference")
+def _spmv_csr_ref(ex, A: Csr, x: jax.Array) -> jax.Array:
+    rows = _csr_row_ids(A)
+    y = jnp.zeros((A.shape[0],) + x.shape[1:], dtype=jnp.result_type(A.values, x))
+    contrib = A.values[:, None] * x[A.indices] if x.ndim == 2 else A.values * x[A.indices]
+    return y.at[rows].add(contrib)
+
+
+@spmv_csr.register("xla")
+def _spmv_csr_xla(ex, A: Csr, x: jax.Array) -> jax.Array:
+    rows = _csr_row_ids(A)
+    contrib = A.values[:, None] * x[A.indices] if x.ndim == 2 else A.values * x[A.indices]
+    return jax.ops.segment_sum(
+        contrib, rows, num_segments=A.shape[0], indices_are_sorted=True
+    )
+
+
+# =============================================================================
+# SpMV — ELL
+# =============================================================================
+
+spmv_ell = registry.operation("spmv_ell", "y = A @ x for ELLPACK")
+
+
+@spmv_ell.register("reference")
+def _spmv_ell_ref(ex, A: Ell, x: jax.Array) -> jax.Array:
+    # gather x per (row, k) then reduce over k — padding contributes 0.
+    gathered = x[A.col_idx]  # (m, k) or (m, k, nrhs)
+    if x.ndim == 2:
+        return jnp.einsum("mk,mkr->mr", A.values, gathered)
+    return jnp.sum(A.values * gathered, axis=1)
+
+
+@spmv_ell.register("xla")
+def _spmv_ell_xla(ex, A: Ell, x: jax.Array) -> jax.Array:
+    return _spmv_ell_ref(ex, A, x)
+
+
+# =============================================================================
+# SpMV — SELL-P
+# =============================================================================
+
+spmv_sellp = registry.operation("spmv_sellp", "y = A @ x for SELL-P")
+
+
+@spmv_sellp.register("reference")
+def _spmv_sellp_ref(ex, A: Sellp, x: jax.Array) -> jax.Array:
+    """Oracle: direct readback of the slice layout, one slice at a time.
+
+    Python loop over slices (static count) — sequential reference semantics,
+    mirroring Ginkgo's reference kernel.
+    """
+    if x.ndim != 1:
+        raise NotImplementedError("reference SELL-P spmv is single-rhs")
+    m = A.shape[0]
+    C = A.slice_size
+    y = jnp.zeros((m,), dtype=jnp.result_type(A.values, x))
+    import numpy as np
+
+    slice_sets = np.asarray(A.slice_sets)
+    for s in range(A.num_slices):
+        lo, hi = int(slice_sets[s]), int(slice_sets[s + 1])
+        width = hi - lo
+        block_v = A.values[lo * C : hi * C].reshape(width, C)
+        block_c = A.col_idx[lo * C : hi * C].reshape(width, C)
+        contrib = (block_v * x[block_c]).sum(axis=0)  # (C,)
+        rows = jnp.arange(C) + s * C
+        y = y.at[rows].add(jnp.where(rows < m, contrib, 0.0))
+    return y
+
+
+@spmv_sellp.register("xla")
+def _spmv_sellp_xla(ex, A: Sellp, x: jax.Array) -> jax.Array:
+    """Vectorized: one flat gather + segment reduction into rows.
+
+    Element t of the flat buffer belongs to slice s(t), local column j, local
+    row r = t % C; its output row is s*C + r.  We compute output rows with a
+    searchsorted over slice_sets (flat index // C gives the column-set index).
+    """
+    if x.ndim != 1:
+        raise NotImplementedError("xla SELL-P spmv is single-rhs")
+    C = A.slice_size
+    total = A.values.shape[0]
+    t = jnp.arange(total, dtype=jnp.int32)
+    colset = t // C  # global column-set index in [0, slice_sets[-1])
+    s = (
+        jnp.searchsorted(A.slice_sets, colset, side="right").astype(jnp.int32) - 1
+    )
+    r = t % C
+    out_row = s * C + r
+    contrib = A.values * x[A.col_idx]
+    y = jax.ops.segment_sum(contrib, out_row, num_segments=A.num_slices * C)
+    return y[: A.shape[0]]
+
+
+# =============================================================================
+# Dense apply + to_dense
+# =============================================================================
+
+spmv_dense = registry.operation("spmv_dense", "y = A @ x (dense)")
+
+
+@spmv_dense.register("reference")
+def _spmv_dense_ref(ex, A: Dense, x: jax.Array) -> jax.Array:
+    return A.values @ x
+
+
+@spmv_dense.register("xla")
+def _spmv_dense_xla(ex, A: Dense, x: jax.Array) -> jax.Array:
+    return A.values @ x
+
+
+to_dense_op = registry.operation("sparse_to_dense", "densify any format")
+
+
+@to_dense_op.register("reference")
+def _to_dense_ref(ex, A) -> jax.Array:
+    if isinstance(A, Dense):
+        return A.values
+    if isinstance(A, Coo):
+        out = jnp.zeros(A.shape, A.values.dtype)
+        return out.at[A.row_idx, A.col_idx].add(A.values)
+    if isinstance(A, Csr):
+        rows = _csr_row_ids(A)
+        out = jnp.zeros(A.shape, A.values.dtype)
+        return out.at[rows, A.indices].add(A.values)
+    if isinstance(A, Ell):
+        m, k = A.values.shape
+        rows = jnp.broadcast_to(jnp.arange(m)[:, None], (m, k))
+        out = jnp.zeros(A.shape, A.values.dtype)
+        return out.at[rows, A.col_idx].add(A.values)
+    if isinstance(A, Sellp):
+        x = jnp.eye(A.shape[1], dtype=A.values.dtype)
+        cols = [_spmv_sellp_ref(ex, A, x[:, j]) for j in range(A.shape[1])]
+        return jnp.stack(cols, axis=1)
+    raise TypeError(f"unknown format {type(A)}")
+
+
+# =============================================================================
+# apply — gko::LinOp::apply
+# =============================================================================
+
+_FORMAT_OP = {
+    Coo: spmv_coo,
+    Csr: spmv_csr,
+    Ell: spmv_ell,
+    Sellp: spmv_sellp,
+    Dense: spmv_dense,
+}
+
+
+def apply(A, x: jax.Array, *, executor=None) -> jax.Array:
+    """``A.apply(x)``: format-dispatch then executor-dispatch."""
+    try:
+        op = _FORMAT_OP[type(A)]
+    except KeyError:
+        raise TypeError(f"no spmv registered for format {type(A)}") from None
+    return op(A, x, executor=executor)
+
+
+def to_dense(A, *, executor=None) -> jax.Array:
+    return to_dense_op(A, executor=executor)
+
+
+# =============================================================================
+# BLAS-1 kernels used by the Krylov solvers (Ginkgo registers these per backend)
+# =============================================================================
+
+dot_op = registry.operation("blas_dot")
+axpy_op = registry.operation("blas_axpy")
+scal_op = registry.operation("blas_scal")
+norm2_op = registry.operation("blas_norm2")
+
+
+@dot_op.register("reference")
+def _dot_ref(ex, x, y):
+    return jnp.vdot(x, y)
+
+
+@dot_op.register("xla")
+def _dot_xla(ex, x, y):
+    return jnp.vdot(x, y)
+
+
+@axpy_op.register("reference")
+def _axpy_ref(ex, alpha, x, y):
+    return alpha * x + y
+
+
+@axpy_op.register("xla")
+def _axpy_xla(ex, alpha, x, y):
+    return alpha * x + y
+
+
+@scal_op.register("reference")
+def _scal_ref(ex, alpha, x):
+    return alpha * x
+
+
+@scal_op.register("xla")
+def _scal_xla(ex, alpha, x):
+    return alpha * x
+
+
+@norm2_op.register("reference")
+def _norm2_ref(ex, x):
+    return jnp.sqrt(jnp.vdot(x, x).real)
+
+
+@norm2_op.register("xla")
+def _norm2_xla(ex, x):
+    return jnp.sqrt(jnp.vdot(x, x).real)
+
+
+def dot(x, y, *, executor=None):
+    return dot_op(x, y, executor=executor)
+
+
+def axpy(alpha, x, y, *, executor=None):
+    return axpy_op(alpha, x, y, executor=executor)
+
+
+def scal(alpha, x, *, executor=None):
+    return scal_op(alpha, x, executor=executor)
+
+
+def norm2(x, *, executor=None):
+    return norm2_op(x, executor=executor)

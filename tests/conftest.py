@@ -1,0 +1,13 @@
+import numpy as np
+import pytest
+
+from hypothesis import settings
+
+# CI profile: small example counts, no deadline (CPU-only container)
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

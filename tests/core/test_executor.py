@@ -1,0 +1,99 @@
+"""Executor model: dispatch, fallback chains, strict mode — the paper's §3."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    NotCompiledError,
+    PallasInterpretExecutor,
+    PallasTpuExecutor,
+    ReferenceExecutor,
+    XlaExecutor,
+    instantiate_common,
+    make_executor,
+    operation,
+    use_executor,
+)
+
+
+@pytest.fixture(scope="module")
+def demo_op():
+    op = operation("test_demo_op")
+
+    @op.register("reference")
+    def _ref(ex, x):
+        return x + 1.0
+
+    @op.register("xla")
+    def _xla(ex, x):
+        return x + 1.0
+
+    return op
+
+
+def test_dispatch_per_space(demo_op):
+    x = jnp.zeros(3)
+    assert demo_op.space_used(ReferenceExecutor()) == "reference"
+    assert demo_op.space_used(XlaExecutor()) == "xla"
+    np.testing.assert_allclose(demo_op(x, executor=XlaExecutor()), 1.0)
+
+
+def test_fallback_chain(demo_op):
+    # pallas executor has no pallas kernel for this op -> falls to xla
+    assert demo_op.space_used(PallasInterpretExecutor()) == "xla"
+
+
+def test_strict_raises_notcompiled(demo_op):
+    # Ginkgo's gko::NotCompiled semantics
+    ex = PallasTpuExecutor(strict=True)
+    with pytest.raises(NotCompiledError):
+        demo_op.space_used(ex)
+    with pytest.raises(NotCompiledError):
+        demo_op(jnp.zeros(3), executor=ex)
+
+
+def test_ambient_executor(demo_op):
+    ex = ReferenceExecutor()
+    with use_executor(ex):
+        demo_op(jnp.zeros(2))
+    assert ex.dispatch_log["test_demo_op"] == 1
+
+
+def test_dispatch_telemetry(demo_op):
+    ex = XlaExecutor()
+    for _ in range(3):
+        demo_op(jnp.zeros(2), executor=ex)
+    assert ex.dispatch_log["test_demo_op"] == 3
+
+
+def test_master_executor():
+    # paper: every device executor carries a CPU-side master
+    ex = PallasInterpretExecutor()
+    assert isinstance(ex.master, ReferenceExecutor)
+    assert ex.master.master is ex.master
+
+
+def test_make_executor_factory():
+    for kind in ("reference", "xla", "pallas", "pallas_interpret"):
+        ex = make_executor(kind)
+        assert ex.kernel_space in ("reference", "xla", "pallas")
+    with pytest.raises(KeyError):
+        make_executor("cuda")
+
+
+def test_instantiate_common():
+    # the "common/ folder" analogue: one skeleton, per-space parameters
+    def skeleton(ex, x, *, block):
+        return x * block
+
+    op = instantiate_common(
+        "test_common_skel", skeleton, {"reference": {"block": 2}, "xla": {"block": 3}}
+    )
+    assert float(op(jnp.ones(()), executor=ReferenceExecutor())) == 2.0
+    assert float(op(jnp.ones(()), executor=XlaExecutor())) == 3.0
+
+
+def test_duplicate_registration_rejected(demo_op):
+    with pytest.raises(ValueError):
+        demo_op.register("reference")(lambda ex, x: x)

@@ -1,0 +1,95 @@
+"""Attention layers: chunked==dense, custom VJP, GQA/MLA decode==full."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ModelConfig
+from repro.kernels.flash_attention.ref import mha_ref
+from repro.nn.attention import (
+    KVCache,
+    MLACache,
+    attention_xla_chunked,
+    gqa_decode,
+    gqa_forward,
+    gqa_init,
+    gqa_prefill,
+    mla_decode,
+    mla_forward,
+    mla_init,
+    mla_prefill,
+)
+
+
+def test_chunked_matches_dense(rng):
+    q = jnp.asarray(rng.normal(size=(2, 4, 50, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 2, 70, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 2, 70, 16)).astype(np.float32))
+    got = attention_xla_chunked(q, k, v, causal=True, chunk=32)
+    np.testing.assert_allclose(got, mha_ref(q, k, v, causal=True), atol=2e-5)
+
+
+def test_chunked_custom_vjp_grads(rng):
+    q = jnp.asarray(rng.normal(size=(1, 2, 24, 8)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, 40, 8)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 1, 40, 8)).astype(np.float32))
+
+    def loss_c(q, k, v):
+        return jnp.sum(jnp.sin(attention_xla_chunked(q, k, v, chunk=16)))
+
+    def loss_d(q, k, v):
+        return jnp.sum(jnp.sin(mha_ref(q, k, v)))
+
+    gc = jax.grad(loss_c, argnums=(0, 1, 2))(q, k, v)
+    gd = jax.grad(loss_d, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gc, gd):
+        np.testing.assert_allclose(a, b, atol=5e-5)
+
+
+@pytest.fixture
+def gqa_cfg():
+    return ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                       vocab=64, n_heads=4, n_kv_heads=2, d_ff=64)
+
+
+def test_gqa_decode_matches_full(rng, gqa_cfg):
+    cfg = gqa_cfg
+    p, _ = gqa_init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    x = jnp.asarray(rng.normal(size=(B, S, 32)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    y_full = gqa_forward(p, x, cfg, pos)
+    cache = KVCache.zeros(B, 2, S + 4, 8, jnp.float32)
+    y_pre, cache = gqa_prefill(p, x[:, :8], cfg, pos[:, :8], cache)
+    np.testing.assert_allclose(y_pre, y_full[:, :8], atol=1e-5)
+    ys = []
+    for t in range(8, S):
+        y_t, cache = gqa_decode(p, x[:, t : t + 1], cfg, jnp.int32(t), cache)
+        ys.append(y_t)
+    np.testing.assert_allclose(
+        jnp.concatenate(ys, axis=1), y_full[:, 8:], atol=1e-4
+    )
+
+
+def test_mla_decode_matches_full(rng):
+    cfg = ModelConfig(
+        name="m", family="mla", n_layers=2, d_model=32, vocab=64, n_heads=4,
+        n_kv_heads=4, d_ff=64, q_lora_rank=16, kv_lora_rank=12,
+        qk_nope_head_dim=8, qk_rope_head_dim=4, v_head_dim=8,
+    )
+    p, _ = mla_init(jax.random.PRNGKey(1), cfg)
+    B, S = 2, 12
+    x = jnp.asarray(rng.normal(size=(B, S, 32)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    y_full = mla_forward(p, x, cfg, pos)
+    cache = MLACache.zeros(B, S + 4, 12, 4, jnp.float32)
+    y_pre, cache = mla_prefill(p, x[:, :8], cfg, pos[:, :8], cache)
+    np.testing.assert_allclose(y_pre, y_full[:, :8], atol=1e-4)
+    ys = []
+    for t in range(8, S):
+        y_t, cache = mla_decode(p, x[:, t : t + 1], cfg, jnp.int32(t), cache)
+        ys.append(y_t)
+    np.testing.assert_allclose(
+        jnp.concatenate(ys, axis=1), y_full[:, 8:], atol=1e-3
+    )

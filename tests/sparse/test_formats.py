@@ -1,0 +1,99 @@
+"""Sparse formats: construction, conversions, SpMV vs dense — all executors."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from repro import sparse
+from repro.core import PallasInterpretExecutor, ReferenceExecutor, XlaExecutor, use_executor
+
+
+def random_sparse(rng, m, n, density=0.15, skew=False):
+    a = rng.normal(size=(m, n)).astype(np.float32)
+    mask = rng.random((m, n)) < density
+    if skew:  # heavy rows every 7th (exercises SELL-P raggedness)
+        mask[::7] = rng.random((len(mask[::7]), n)) < min(6 * density, 0.9)
+    return np.where(mask, a, 0.0)
+
+
+EXECUTORS = [ReferenceExecutor, XlaExecutor, PallasInterpretExecutor]
+FORMATS = ["coo", "csr", "ell", "sellp", "dense"]
+
+
+def build(fmt, a):
+    return {
+        "coo": sparse.coo_from_dense,
+        "csr": sparse.csr_from_dense,
+        "ell": sparse.ell_from_dense,
+        "sellp": sparse.sellp_from_dense,
+        "dense": lambda x: sparse.Dense(jnp.asarray(x)),
+    }[fmt](a)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("exec_cls", EXECUTORS)
+def test_spmv_vs_dense(rng, fmt, exec_cls):
+    a = random_sparse(rng, 57, 43, skew=True)
+    x = rng.normal(size=(43,)).astype(np.float32)
+    A = build(fmt, a)
+    with use_executor(exec_cls()):
+        got = sparse.apply(A, jnp.asarray(x))
+    np.testing.assert_allclose(got, a @ x, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_to_dense_roundtrip(rng, fmt):
+    a = random_sparse(rng, 23, 31)
+    A = build(fmt, a)
+    with use_executor(ReferenceExecutor()):
+        np.testing.assert_allclose(sparse.to_dense(A), a, atol=1e-6)
+
+
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(1, 40),
+    density=st.floats(0.01, 0.9),
+    seed=st.integers(0, 1000),
+)
+def test_formats_agree_property(m, n, density, seed):
+    """All formats compute the same SpMV for arbitrary shapes/sparsity."""
+    rng = np.random.default_rng(seed)
+    a = random_sparse(rng, m, n, density)
+    x = rng.normal(size=(n,)).astype(np.float32)
+    want = a @ x
+    with use_executor(XlaExecutor()):
+        for fmt in ("coo", "csr", "ell", "sellp"):
+            got = sparse.apply(build(fmt, a), jnp.asarray(x))
+            np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_empty_rows_and_cols(rng):
+    a = np.zeros((16, 16), np.float32)
+    a[3, 5] = 2.0
+    x = rng.normal(size=(16,)).astype(np.float32)
+    with use_executor(XlaExecutor()):
+        for fmt in ("coo", "csr", "ell", "sellp"):
+            got = sparse.apply(build(fmt, a), jnp.asarray(x))
+            np.testing.assert_allclose(got, a @ x, atol=1e-5)
+
+
+def test_sellp_slice_layout(rng):
+    """SELL-P invariants: slice_sets cumsum of padded widths, stride aligned."""
+    a = random_sparse(rng, 37, 20, skew=True)
+    A = sparse.sellp_from_dense(a, slice_size=8, stride_factor=4)
+    ss = np.asarray(A.slice_sets)
+    sc = np.asarray(A.slice_cols)
+    assert (np.diff(ss) == sc).all()
+    assert (sc % 4 == 0).all()
+    assert A.values.shape[0] == ss[-1] * A.slice_size
+    assert A.max_slice_cols == sc.max()
+
+
+def test_multi_rhs_spmv(rng):
+    a = random_sparse(rng, 20, 15)
+    X = rng.normal(size=(15, 3)).astype(np.float32)
+    with use_executor(XlaExecutor()):
+        for fmt in ("coo", "csr", "ell"):
+            got = sparse.apply(build(fmt, a), jnp.asarray(X))
+            np.testing.assert_allclose(got, a @ X, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,216 @@
+"""Optimizer, data pipeline, checkpointing, compression, fault-tolerance."""
+
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.data import (
+    DataConfig,
+    DataIterator,
+    entropy_floor,
+    global_step_batch,
+    shard_batch_np,
+)
+from repro.optim import (
+    adamw,
+    clip_by_global_norm,
+    compress_tree,
+    constant_schedule,
+    decompress_tree,
+    init_error_state,
+    quantize_int8,
+    dequantize_int8,
+    warmup_cosine_schedule,
+)
+from repro.runtime import PreemptionHandler, StragglerMonitor, run_with_restarts
+
+
+# -- optimizer ---------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    opt = adamw(warmup_cosine_schedule(0.1, 10, 200), weight_decay=0.0)
+    params = {"w": jnp.ones(4) * 3.0}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - 1.0) ** 2))(params)
+        params, state, _ = opt.update(params, g, state)
+    np.testing.assert_allclose(params["w"], 1.0, atol=1e-2)
+
+
+def test_adamw_weight_decay_pulls_to_zero():
+    opt = adamw(constant_schedule(0.05), weight_decay=1.0, clip_norm=None)
+    params = {"w": jnp.ones(4)}
+    state = opt.init(params)
+    for _ in range(100):
+        g = {"w": jnp.zeros(4)}
+        params, state, _ = opt.update(params, g, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones(4) * 10.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(float(norm), 20.0)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-5
+    )
+
+
+def test_schedule_shapes():
+    s = warmup_cosine_schedule(1.0, 10, 100, final_frac=0.1)
+    assert float(s(jnp.int32(0))) == 0.0
+    np.testing.assert_allclose(float(s(jnp.int32(10))), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(s(jnp.int32(100))), 0.1, rtol=1e-4)
+
+
+# -- data --------------------------------------------------------------------------
+
+def test_data_determinism_and_sharding():
+    cfg = DataConfig(vocab=64, seq_len=8, global_batch=4, num_shards=2, seed=5)
+    b1, b2 = global_step_batch(cfg, 3), global_step_batch(cfg, 3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    s0, s1 = shard_batch_np(cfg, 3, 0), shard_batch_np(cfg, 3, 1)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+    np.testing.assert_array_equal(
+        np.concatenate([s0["tokens"], s1["tokens"]]), b1["tokens"]
+    )
+    # next-token labels
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_data_resume_state():
+    cfg = DataConfig(vocab=64, seq_len=8, global_batch=2, seed=1)
+    it = DataIterator(cfg)
+    next(it)
+    st_ = it.state()
+    it2 = DataIterator(cfg)
+    it2.restore(st_)
+    np.testing.assert_array_equal(next(it)["tokens"], next(it2)["tokens"])
+
+
+@given(step=st.integers(0, 1000), shard=st.integers(0, 7))
+def test_data_pure_function_property(step, shard):
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=16, num_shards=8, seed=9)
+    a = shard_batch_np(cfg, step, shard)
+    b = shard_batch_np(cfg, step, shard)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 128
+
+
+def test_entropy_floor_positive():
+    cfg = DataConfig(vocab=64, seq_len=8, global_batch=2, seed=1)
+    assert 0.5 < entropy_floor(cfg) < np.log(5) + 1e-6
+
+
+def test_stub_embeddings_mode():
+    cfg = DataConfig(vocab=64, seq_len=8, global_batch=2, seed=1, stub_embed_dim=32)
+    b = global_step_batch(cfg, 0)
+    assert "embeds" in b and "tokens" not in b
+    assert b["embeds"].shape == (2, 8, 32)
+
+
+# -- checkpoint ----------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_keepk_atomic():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep_k=2)
+        tree = {"a": jnp.arange(6.0), "b": {"c": jnp.ones((2, 3), jnp.int32)}}
+        for s in (1, 2, 3):
+            mgr.save(s, tree, metadata={"step": s})
+        mgr.wait()
+        assert mgr.all_steps() == [2, 3]
+        proto = jax.tree_util.tree_map(jnp.zeros_like, tree)
+        got, meta = mgr.restore(target=proto)
+        assert meta["step"] == 3
+        np.testing.assert_array_equal(got["a"], tree["a"])
+        np.testing.assert_array_equal(got["b"]["c"], tree["b"]["c"])
+        # a stale .tmp dir is garbage-collected on init
+        os.makedirs(os.path.join(d, "step_00000009.tmp"))
+        CheckpointManager(d)
+        assert not os.path.exists(os.path.join(d, "step_00000009.tmp"))
+
+
+def test_checkpoint_restores_dataclass_pytrees():
+    from repro.optim import adamw, constant_schedule
+
+    opt = adamw(constant_schedule(1e-3))
+    params = {"w": jnp.ones((3, 2))}
+    state = opt.init(params)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(1, {"params": params, "opt": state}, block=True)
+        proto = {"params": jax.tree_util.tree_map(jnp.zeros_like, params),
+                 "opt": jax.tree_util.tree_map(jnp.zeros_like, state)}
+        got, _ = mgr.restore(target=proto)
+        np.testing.assert_array_equal(got["params"]["w"], params["w"])
+        assert int(got["opt"].step) == 0
+
+
+# -- compression ----------------------------------------------------------------------
+
+def test_quantize_roundtrip_bounds(rng):
+    x = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x)).max()
+    assert err <= float(s) / 2 + 1e-7
+
+
+def test_error_feedback_unbiased_over_time(rng):
+    g = {"w": jnp.asarray(rng.normal(size=(128,)) * 1e-3, jnp.float32)}
+    err = init_error_state(g)
+    acc = jnp.zeros(128)
+    acc_q = jnp.zeros(128)
+    for _ in range(50):
+        (q, s), err = compress_tree(g, err)
+        acc = acc + g["w"]
+        acc_q = acc_q + decompress_tree(q, s, g)["w"]
+    rel = float(jnp.linalg.norm(acc - acc_q) / jnp.linalg.norm(acc))
+    assert rel < 0.01
+
+
+# -- runtime ---------------------------------------------------------------------------
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(window=20, factor=2.0, min_samples=5)
+    for _ in range(10):
+        assert not mon.record(0.1)
+    assert mon.record(0.5)
+    assert mon.alarms == 1
+    assert not mon.record(0.12)
+
+
+def test_preemption_handler_simulation():
+    h = PreemptionHandler()
+    assert not h.preempted
+    h.simulate()
+    assert h.preempted
+
+
+def test_run_with_restarts():
+    calls = {"n": 0}
+
+    def loop(state):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("injected fault")
+        return "done"
+
+    restarts = []
+    out = run_with_restarts(
+        dict, loop, max_restarts=5, on_restart=lambda i, e: restarts.append(i)
+    )
+    assert out == "done" and calls["n"] == 3 and restarts == [1, 2]
+
+
+def test_run_with_restarts_exhausts():
+    def loop(state):
+        raise RuntimeError("always fails")
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(dict, loop, max_restarts=2)
