@@ -9,6 +9,12 @@ Emits ``name,us_per_call,derived`` CSV lines:
   Roofline -> roofline        (LM cells from the dry-run artifacts, if present)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--full]
+     PYTHONPATH=src python -m benchmarks.run --autotune [--target NAME] [--out PATH]
+
+``--autotune`` runs the launch-configuration sweep instead of the paper
+figures: it measures candidate tile geometries per op (benchmarks/autotune.py)
+and persists the winners as a per-target tuning table consumable by
+``repro.core.tuning.load_table`` / the ``REPRO_TUNING_PATH`` env var.
 """
 
 from __future__ import annotations
@@ -20,8 +26,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full-size matrices (slower; default: small suite)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep candidate kernel tilings and persist the "
+                         "winners as a per-target tuning table")
+    ap.add_argument("--target", default="cpu_interpret",
+                    help="hardware target for --autotune "
+                         "(see repro.core.params.TARGETS)")
+    ap.add_argument("--out", default=None,
+                    help="tuning-table output path for --autotune")
     args = ap.parse_args()
     small = not args.full
+
+    if args.autotune:
+        from benchmarks import autotune
+
+        autotune.run(target=args.target, out=args.out)
+        return
 
     from benchmarks import bench_coop, bench_solvers, bench_spmv, bench_stream
 

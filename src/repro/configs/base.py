@@ -95,7 +95,9 @@ class ModelConfig:
     # always uses the flash kernel)
     dtype: str = "float32"
     attn_impl: str = "dense"  # "dense" | "chunked"
-    attn_chunk: int = 512
+    # kv-chunk length for the chunked variant; None -> resolved from the
+    # executor's launch-configuration table (core/tuning.py)
+    attn_chunk: Optional[int] = None
     # sequence-parallel activation sharding between blocks: a 2-tuple
     # (batch_mesh_axes, seq_mesh_axis), e.g. (("pod","data"), "model");
     # () disables (single-device tests).  Set by the launcher per mesh.

@@ -8,6 +8,8 @@ Public surface:
   (``GKO_REGISTER_OPERATION`` analogue).
 * :mod:`repro.core.coop` — cooperative groups on TPU lane tiles.
 * :mod:`repro.core.params` — per-target hardware parameter tables.
+* :mod:`repro.core.tuning` — launch-configuration resolution (per-target
+  tuning tables + autotune cache) behind ``Executor.launch_config``.
 """
 
 from repro.core.executor import (
@@ -19,6 +21,7 @@ from repro.core.executor import (
     current_executor,
     default_executor,
     make_executor,
+    reset_default_executor,
     use_executor,
 )
 from repro.core.params import (
@@ -39,7 +42,8 @@ from repro.core.registry import (
     register,
     registered_spaces,
 )
-from repro.core import coop
+from repro.core.tuning import LaunchConfig, TuningSpec
+from repro.core import coop, tuning
 
 __all__ = [
     "Executor",
@@ -49,8 +53,12 @@ __all__ = [
     "PallasInterpretExecutor",
     "current_executor",
     "default_executor",
+    "reset_default_executor",
     "use_executor",
     "make_executor",
+    "LaunchConfig",
+    "TuningSpec",
+    "tuning",
     "HardwareParams",
     "get_target",
     "TPU_V5E",

@@ -49,6 +49,7 @@ __all__ = [
     "current_executor",
     "use_executor",
     "default_executor",
+    "reset_default_executor",
     "make_executor",
 ]
 
@@ -122,6 +123,15 @@ class Executor:
 
     def _note_dispatch(self, op_name: str) -> None:
         self.dispatch_log[op_name] += 1
+
+    # -- launch configuration (paper: per-architecture kernel parameters) --------
+    def launch_config(self, op_name: str, shapes: Dict[str, int]):
+        """Resolve the tile geometry for ``op_name`` at ``shapes`` on this
+        executor's hardware target (autotune cache -> tuning table ->
+        HardwareParams seed, VMEM-budget checked)."""
+        from repro.core import tuning
+
+        return tuning.resolve(op_name, shapes, self.hw)
 
     @contextlib.contextmanager
     def activate(self):
@@ -200,6 +210,16 @@ def default_executor() -> Executor:
     return _DEFAULT
 
 
+def reset_default_executor() -> None:
+    """Drop the cached platform-default executor.
+
+    Tests (and anything that mutates the default target table) use this so the
+    module-level cache cannot leak one test's executor into the next.
+    """
+    global _DEFAULT
+    _DEFAULT = None
+
+
 def current_executor() -> Executor:
     ex = _CURRENT.get()
     return ex if ex is not None else default_executor()
@@ -221,12 +241,31 @@ _EXECUTOR_FACTORY = {
 }
 
 
+def _executor_for_params(hw: HardwareParams, **kw) -> Executor:
+    """Pick the executor class a hardware target naturally runs under."""
+    if hw.kernel_space == "pallas":
+        cls = PallasInterpretExecutor if hw.interpret else PallasTpuExecutor
+    elif hw.kernel_space == "xla":
+        cls = XlaExecutor
+    else:
+        cls = ReferenceExecutor
+    return cls(hw, **kw)
+
+
 def make_executor(kind: str, hw: Optional[HardwareParams] = None, **kw) -> Executor:
-    """Factory used by configs/CLIs: ``--executor pallas_interpret`` etc."""
-    try:
-        factory = _EXECUTOR_FACTORY[kind]
-    except KeyError:
-        raise KeyError(
-            f"unknown executor kind {kind!r}; known: {sorted(_EXECUTOR_FACTORY)}"
-        ) from None
-    return factory(hw, **kw)
+    """Factory used by configs/CLIs: ``--executor pallas_interpret`` etc.
+
+    ``kind`` is either a kernel-space kind (``reference`` / ``xla`` /
+    ``pallas`` / ``pallas_interpret``) or a hardware target name from
+    :data:`repro.core.params.TARGETS` (``tpu_v4``, ``cpu_interpret``, ...) —
+    the latter picks both the parameter table and the executor class.
+    """
+    factory = _EXECUTOR_FACTORY.get(kind)
+    if factory is not None:
+        return factory(hw, **kw)
+    if kind in params_lib.TARGETS:
+        return _executor_for_params(hw or params_lib.get_target(kind), **kw)
+    raise KeyError(
+        f"unknown executor kind {kind!r}; known kinds: "
+        f"{sorted(_EXECUTOR_FACTORY)}, targets: {sorted(params_lib.TARGETS)}"
+    ) from None

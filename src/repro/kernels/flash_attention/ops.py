@@ -1,60 +1,124 @@
-"""Registry bindings for attention (operation ``nn_attention``)."""
+"""Registry bindings for attention (operation ``nn_attention``).
+
+One skeleton serves all three kernel spaces (``instantiate_common`` — the
+``common/`` folder idiom); the Pallas instantiation resolves its block
+geometry through the executor's launch-configuration table instead of
+hard-coding tile sizes.
+"""
 
 from __future__ import annotations
 
 from typing import Optional
 
-from repro.core import registry
+from repro.core import registry, tuning
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import mha_ref
 
-attention_op = registry.operation(
-    "nn_attention", "softmax attention (B,Hq,S,D)x(B,Hkv,Skv,D) -> (B,Hq,S,D)"
-)
 
-
-@attention_op.register("reference")
-def _attn_reference(ex, q, k, v, causal: bool = True, scale: Optional[float] = None):
-    return mha_ref(q, k, v, causal=causal, scale=scale)
-
-
-@attention_op.register("xla")
-def _attn_xla(ex, q, k, v, causal: bool = True, scale: Optional[float] = None):
-    # dense-materialized attention; XLA fuses but the S x Skv score matrix hits
-    # HBM — the Pallas kernel is the memory-saving path
-    return mha_ref(q, k, v, causal=causal, scale=scale)
-
-
-def _vmem_bytes(block_q: int, block_kv: int, d: int, itemsize: int) -> int:
+def _vmem_bytes(shapes, block) -> int:
     """Working set per grid step: q/k/v/o tiles + f32 scratch (m, l, acc) +
     the (block_q, block_kv) score tile."""
-    tiles = (block_q + 2 * block_kv + block_q) * d * itemsize
-    scratch = block_q * (128 * 2 + d) * 4
-    scores = block_q * block_kv * 4
+    bq, bkv = block["block_q"], block["block_kv"]
+    d = shapes.get("D", 128)
+    itemsize = shapes.get("itemsize", 4)
+    tiles = (bq + 2 * bkv + bq) * d * itemsize
+    scratch = bq * (128 * 2 + d) * 4
+    scores = bq * bkv * 4
     return tiles + scratch + scores
 
 
-@attention_op.register("pallas")
-def _attn_pallas(ex, q, k, v, causal: bool = True, scale: Optional[float] = None):
-    # block shapes from the hardware table (MXU-aligned), shrunk until the
-    # working set fits the target's VMEM budget (paper: per-architecture
-    # kernel configuration parameters live with the executor, not the kernel)
-    block_q = block_kv = max(ex.hw.mxu_dim, 128)
-    d = q.shape[-1]
-    budget = ex.hw.vmem_limit_bytes // 4  # leave headroom for double-buffering
-    while (
-        block_q > ex.hw.sublane_count
-        and _vmem_bytes(block_q, block_kv, d, q.dtype.itemsize) > budget
-    ):
-        block_q //= 2
-        block_kv //= 2
+def _constrain(hw, shapes, block):
+    # power-of-two tiles keep the MXU happy and the shrink loop simple
+    return {
+        key: tuning.prev_pow2(max(int(block[key]), hw.sublane_count))
+        for key in ("block_q", "block_kv")
+    }
+
+
+def _candidates(hw, shapes):
+    base = max(hw.mxu_dim, 128)
+    return [
+        {"block_q": base // 2, "block_kv": base // 2},
+        {"block_q": base, "block_kv": base},
+        {"block_q": base, "block_kv": 2 * base},
+        {"block_q": 2 * base, "block_kv": 2 * base},
+    ]
+
+
+ATTENTION_SPEC = tuning.register_spec(
+    tuning.TuningSpec(
+        op="nn_attention",
+        params=("block_q", "block_kv"),
+        seed=lambda hw: {
+            "block_q": max(hw.mxu_dim, 128),
+            "block_kv": max(hw.mxu_dim, 128),
+        },
+        vmem_bytes=_vmem_bytes,
+        constrain=_constrain,
+        floors={"block_q": 8, "block_kv": 8},
+        candidates=_candidates,
+    )
+)
+
+# kv-chunk length of the chunked-scan xla attention variant
+# (repro.nn.attention.attention_xla_chunked): a launch parameter like any
+# other — resolved per target when cfg.attn_chunk is None.  The scan never
+# materializes (S, Skv), so the budget driver is just the per-chunk score block.
+CHUNKED_ATTENTION_SPEC = tuning.register_spec(
+    tuning.TuningSpec(
+        op="nn_attention_chunked",
+        params=("chunk",),
+        seed=lambda hw: {"chunk": max(hw.lane_count * 4, 512)},
+        vmem_bytes=lambda shapes, block: 4
+        * block["chunk"]
+        * (shapes.get("S", 512) + 2 * shapes.get("D", 128)),
+        constrain=lambda hw, shapes, block: {
+            "chunk": max(
+                int(block["chunk"]) - int(block["chunk"]) % hw.lane_count,
+                hw.lane_count,
+            )
+        },
+        floors={"chunk": 128},
+        candidates=lambda hw, shapes: [{"chunk": c} for c in (256, 512, 1024)],
+    )
+)
+
+
+def _attention_skeleton(
+    ex, q, k, v, causal: bool = True, scale: Optional[float] = None, *, variant: str
+):
+    if variant != "pallas":
+        # dense-materialized attention; XLA fuses but the S x Skv score matrix
+        # hits HBM — the Pallas kernel is the memory-saving path
+        return mha_ref(q, k, v, causal=causal, scale=scale)
+    cfg = ex.launch_config(
+        "nn_attention",
+        {
+            "S": q.shape[2],
+            "Skv": k.shape[2],
+            "D": q.shape[-1],
+            "itemsize": q.dtype.itemsize,
+        },
+    )
     return flash_attention(
         q,
         k,
         v,
         causal=causal,
         scale=scale,
-        block_q=block_q,
-        block_kv=block_kv,
+        block_q=cfg["block_q"],
+        block_kv=cfg["block_kv"],
         interpret=ex.interpret,
     )
+
+
+attention_op = registry.instantiate_common(
+    "nn_attention",
+    _attention_skeleton,
+    {
+        "reference": dict(variant="reference"),
+        "xla": dict(variant="xla"),
+        "pallas": dict(variant="pallas"),
+    },
+)
+attention_op.__doc__ = "softmax attention (B,Hq,S,D)x(B,Hkv,Skv,D) -> (B,Hq,S,D)"

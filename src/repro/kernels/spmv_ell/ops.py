@@ -1,33 +1,83 @@
-"""Registry binding: the Pallas ELL SpMV serves operation ``spmv_ell``."""
+"""Registry binding: the Pallas ELL SpMV serves operation ``spmv_ell``.
+
+The reference/xla spaces live in :mod:`repro.sparse.ops`; this module binds the
+hardware-native skeleton, whose (block_m, block_k) tile and x-residency
+feasibility both come from the launch-configuration table.
+"""
 
 from __future__ import annotations
 
-from repro.core import registry
+from repro.core import registry, tuning
 from repro.kernels.spmv_ell.kernel import spmv_ell as spmv_ell_pallas
 from repro.sparse.formats import Ell
 
 
-@registry.register("spmv_ell", "pallas")
-def _spmv_ell_pallas(ex, A: Ell, x):
+def _vmem_bytes(shapes, block) -> int:
+    # cols (int32) + values tiles, x fully VMEM-resident, output column
+    bm, bk = block["block_m"], block["block_k"]
+    n = shapes.get("n", 0)
+    itemsize = shapes.get("itemsize", 4)
+    return bm * bk * (itemsize + 4) + n * itemsize + bm * itemsize
+
+
+def _constrain(hw, shapes, block):
+    bm = max(int(block["block_m"]), hw.sublane_count)
+    bm -= bm % hw.sublane_count
+    # power-of-two lanes keep the coop butterfly legal
+    bk = tuning.prev_pow2(max(int(block["block_k"]), 8))
+    return {"block_m": bm, "block_k": bk}
+
+
+ELL_SPEC = tuning.register_spec(
+    tuning.TuningSpec(
+        op="spmv_ell",
+        params=("block_m", "block_k"),
+        seed=lambda hw: {
+            "block_m": max(hw.sublane_count * 32, 8),
+            "block_k": hw.lane_count,
+        },
+        vmem_bytes=_vmem_bytes,
+        constrain=_constrain,
+        floors={"block_m": 8, "block_k": 8},
+        candidates=lambda hw, shapes: [
+            {"block_m": bm, "block_k": bk}
+            for bm in (hw.sublane_count * 16, hw.sublane_count * 32, hw.sublane_count * 64)
+            for bk in (hw.lane_count // 2, hw.lane_count)
+        ],
+    )
+)
+
+
+def _spmv_ell_skeleton(ex, A: Ell, x, *, variant: str):
     if x.ndim != 1:
         raise NotImplementedError("pallas ELL spmv is single-rhs")
-    n = x.shape[0]
-    if n * x.dtype.itemsize > ex.hw.vmem_limit_bytes // 4:
+    cfg = ex.launch_config(
+        "spmv_ell",
+        {
+            "m": A.values.shape[0],
+            "k": A.values.shape[1],
+            "n": x.shape[0],
+            "itemsize": x.dtype.itemsize,
+        },
+    )
+    if not cfg.fits_vmem:
         # x would not fit the VMEM residency strategy on this target —
         # fall through to the XLA kernel (Ginkgo: executor picks the kernel
         # variant suited to the problem granularity).
         from repro.sparse.ops import _spmv_ell_xla
 
         return _spmv_ell_xla(ex, A, x)
-    # block shape from the hardware table: sublane-aligned rows, lane-sized k
-    block_m = max(ex.hw.sublane_count * 32, 8)
-    block_k = ex.hw.lane_count
     return spmv_ell_pallas(
         A.col_idx,
         A.values,
         x,
-        block_m=block_m,
-        block_k=block_k,
+        block_m=cfg["block_m"],
+        block_k=cfg["block_k"],
         use_coop=True,
         interpret=ex.interpret,
     )
+
+
+registry.instantiate_common(
+    "spmv_ell", _spmv_ell_skeleton, {"pallas": dict(variant="pallas")}
+)

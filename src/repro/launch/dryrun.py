@@ -40,7 +40,7 @@ from repro.configs import SHAPES, cells, get_config, ARCH_IDS
 from repro.distributed import sharding as shd
 from repro.launch import costmodel
 from repro.launch import steps as steps_lib
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh as mesh_lib_use_mesh
 from repro.models import lm
 from repro.optim import adamw, warmup_cosine_schedule
 
@@ -198,6 +198,20 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool, zero: str = "zero
     return fn, raw, args, mesh, cfg, shape
 
 
+def _peak_bytes(mem) -> Optional[float]:
+    """Peak device memory: the direct stat on newer jax, else the
+    argument+output+temp sum older CompiledMemoryStats exposes."""
+    peak = getattr(mem, "peak_memory_in_bytes", None)
+    if peak is not None:
+        return float(peak)
+    parts = [
+        getattr(mem, a, 0) or 0
+        for a in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes")
+    ]
+    return float(sum(parts)) if any(parts) else None
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool, zero: str = "zero1",
              attn: str = "chunked", sp: bool = True, capacity: float = None,
              remat: str = "block", moe_dispatch: str = "gather",
@@ -209,7 +223,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, zero: str = "zero1"
         capacity=capacity, remat=remat, moe_dispatch=moe_dispatch,
     )
     n_chips = mesh.size
-    with jax.set_mesh(mesh):
+    with mesh_lib_use_mesh(mesh):
         lowered = fn.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -225,7 +239,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, zero: str = "zero1"
                 logical_flash = costmodel.function_cost(raw_fn, *args)
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = costmodel.hlo_cost_analysis(compiled)
     hlo = compiled.as_text()
     census = collective_census(hlo)
 
@@ -269,7 +283,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, zero: str = "zero1"
             "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
             "output_bytes": getattr(mem, "output_size_in_bytes", None),
             "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "peak_bytes": _peak_bytes(mem),
         },
         "collectives": census,
         "roofline": {

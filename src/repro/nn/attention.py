@@ -163,8 +163,15 @@ def _attention_core(q, k, v, cfg, causal=True, scale=None, executor=None):
 
         ex = executor if executor is not None else current_executor()
         if ex.kernel_space != "pallas":
+            chunk = cfg.attn_chunk
+            if chunk is None:
+                chunk = ex.launch_config(
+                    "nn_attention_chunked",
+                    {"S": q.shape[2], "Skv": k.shape[2], "D": q.shape[-1],
+                     "itemsize": q.dtype.itemsize},
+                )["chunk"]
             return attention_xla_chunked(
-                q, k, v, causal=causal, scale=scale, chunk=cfg.attn_chunk
+                q, k, v, causal=causal, scale=scale, chunk=chunk
             )
     return _attention_op(q, k, v, causal=causal, scale=scale, executor=executor)
 

@@ -150,15 +150,22 @@ def _extract_blocks_xla(ex, A, block_size: int):
 
 
 def block_jacobi_preconditioner(
-    A: MatrixLike, block_size: int = 4, executor=None
+    A: MatrixLike, block_size: Optional[int] = None, executor=None
 ) -> Callable:
     """Block-Jacobi (gko::preconditioner::Jacobi with block size > 1):
     M^{-1} = blockdiag(A_11^{-1}, A_22^{-1}, ...) — Ginkgo's flagship
     preconditioner for the solver benchmarks.
 
+    ``block_size=None`` takes the executor's cooperative-subgroup width from
+    the hardware table (Ginkgo tunes Jacobi storage to the subwarp size).
     Singular/padded blocks fall back to identity on their zero rows via a
     diagonal ridge before inversion.
     """
+    if block_size is None:
+        from repro.core.executor import current_executor
+
+        ex = executor if executor is not None else current_executor()
+        block_size = ex.hw.subgroup_size
     n = A.shape[0] if hasattr(A, "shape") else A.values.shape[0]
     blocks = extract_diag_blocks_op(A, block_size, executor=executor)
     nb = blocks.shape[0]

@@ -1,0 +1,91 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+Re-exports ``given`` / ``settings`` / ``st`` from the real hypothesis when
+available.  Otherwise provides a minimal emulation of the strategy surface
+this suite uses (``integers``, ``sampled_from``, ``floats``): each ``@given``
+test expands into a seeded, deterministic ``pytest.mark.parametrize`` sweep
+(endpoints first, then uniform samples), so the property tests keep running —
+with less adversarial search than real hypothesis, but far better than
+skipping whole modules.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+    import zlib
+
+    import pytest
+
+    _DEFAULT_EXAMPLES = 12
+
+    class _Strategy:
+        def __init__(self, sample, edges=()):
+            self._sample = sample
+            self._edges = tuple(edges)
+
+        def examples(self, rnd, n):
+            out = list(self._edges[:n])
+            while len(out) < n:
+                out.append(self._sample(rnd))
+            return out
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda r: r.randint(min_value, max_value),
+                edges=(min_value, max_value),
+            )
+
+        @staticmethod
+        def sampled_from(items):
+            items = list(items)
+            return _Strategy(lambda r: r.choice(items), edges=items)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda r: r.uniform(min_value, max_value),
+                edges=(min_value, max_value),
+            )
+
+    class settings:  # noqa: N801
+        def __init__(self, max_examples=_DEFAULT_EXAMPLES, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._hyp_max_examples = self.max_examples
+            return fn
+
+        @staticmethod
+        def register_profile(*_a, **_k):
+            return None
+
+        @staticmethod
+        def load_profile(*_a, **_k):
+            return None
+
+    def given(**strats):
+        keys = sorted(strats)
+
+        def deco(fn):
+            n = getattr(fn, "_hyp_max_examples", _DEFAULT_EXAMPLES)
+            rnd = random.Random(zlib.crc32(fn.__name__.encode()))
+            per_key = {k: strats[k].examples(rnd, n) for k in keys}
+            cases, seen = [], set()
+            for i in range(n):
+                case = tuple(per_key[k][i] for k in keys)
+                if case in seen:
+                    continue
+                seen.add(case)
+                cases.append(case if len(keys) > 1 else case[0])
+            return pytest.mark.parametrize(",".join(keys), cases)(fn)
+
+        return deco

@@ -2,9 +2,10 @@
 
 import numpy as np
 import jax
+from jax import experimental as jax_experimental
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, strategies as st
+from _hyp_compat import given, st
 
 from repro.core import coop
 
@@ -94,7 +95,7 @@ def test_ballot_wavefront64_needs_x64():
 
 
 def test_ballot_wavefront64_under_x64():
-    with jax.enable_x64(True):
+    with jax_experimental.enable_x64(True):
         pred = jnp.asarray(np.tile(np.arange(64) % 3 == 0, 2))
         sg = coop.subgroup(jnp.zeros((128,)), 8, warp_size=64)
         cnt = np.asarray(sg.count(pred)).reshape(16, 8)[:, 0]

@@ -97,3 +97,81 @@ def test_instantiate_common():
 def test_duplicate_registration_rejected(demo_op):
     with pytest.raises(ValueError):
         demo_op.register("reference")(lambda ex, x: x)
+
+
+# -- PR: launch-config subsystem satellites -----------------------------------
+
+
+def test_make_executor_accepts_target_names():
+    from repro.core import params as hw_params
+
+    ex = make_executor("tpu_v4")
+    assert isinstance(ex, PallasTpuExecutor)
+    assert ex.hw is hw_params.TPU_V4
+    ex2 = make_executor("cpu_interpret")
+    assert isinstance(ex2, PallasInterpretExecutor)
+    assert ex2.interpret
+    ex3 = make_executor("cpu_xla")
+    assert isinstance(ex3, XlaExecutor)
+    ex4 = make_executor("cpu_reference")
+    assert isinstance(ex4, ReferenceExecutor)
+
+
+def test_reset_default_executor():
+    from repro.core import default_executor, reset_default_executor
+
+    reset_default_executor()
+    first = default_executor()
+    assert default_executor() is first  # cached
+    reset_default_executor()
+    second = default_executor()
+    assert second is not first  # cache actually dropped
+    assert type(second) is type(first)
+
+
+KERNEL_OPS = (
+    "nn_attention",
+    "nn_rmsnorm",
+    "nn_rwkv6_scan",
+    "nn_ssd_scan",
+    "spmv_ell",
+    "spmv_sellp",
+)
+
+
+@pytest.mark.parametrize("op_name", KERNEL_OPS)
+def test_each_registered_op_serves_expected_space(op_name):
+    """Dispatch telemetry: every kernel family serves each executor from the
+    expected kernel space (paper: executor picks the backend, not the op)."""
+    import repro.kernels  # noqa: F401
+
+    op = operation(op_name)
+    assert op.space_used(ReferenceExecutor()) == "reference"
+    assert op.space_used(PallasInterpretExecutor()) == "pallas"
+    # xla executors fall back to reference only when no xla impl exists
+    expected_xla = "xla" if "xla" in op._impls else "reference"
+    assert op.space_used(XlaExecutor()) == expected_xla
+
+
+@pytest.mark.parametrize("op_name", ("spmv_coo", "spmv_csr", "blas_dot"))
+def test_strict_mode_raises_for_missing_pallas_kernels(op_name):
+    """strict=True refuses the fallback chain: ops without a pallas kernel
+    raise NotCompiledError on a strict pallas executor (gko::NotCompiled)."""
+    import repro.sparse.ops  # noqa: F401 — populate the operations
+
+    ex = PallasTpuExecutor(strict=True)
+    with pytest.raises(NotCompiledError):
+        operation(op_name).space_used(ex)
+
+
+def test_dispatch_log_counts_model_ops(rng):
+    import numpy as np
+    import repro.kernels  # noqa: F401
+
+    ex = PallasInterpretExecutor()
+    x = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(32,)).astype(np.float32))
+    op = operation("nn_rmsnorm")
+    op(x, w, executor=ex)
+    op(x, w, executor=ex)
+    assert ex.dispatch_log["nn_rmsnorm"] == 2

@@ -8,7 +8,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro import sparse
 from repro.kernels.flash_attention.kernel import flash_attention
@@ -180,10 +180,10 @@ def test_rwkv6_extreme_decay_stability(rng):
 
 
 def test_flash_binding_vmem_autofit(rng):
-    """The pallas binding shrinks blocks until the working set fits VMEM."""
+    """The launch-config resolver shrinks blocks until the set fits VMEM."""
     import dataclasses
 
-    from repro.core import PallasInterpretExecutor, params as hw_params
+    from repro.core import PallasInterpretExecutor, params as hw_params, tuning
     from repro.core.registry import operation
 
     tiny_vmem = dataclasses.replace(
@@ -200,7 +200,10 @@ def test_flash_binding_vmem_autofit(rng):
     np.testing.assert_allclose(
         np.asarray(out_small), np.asarray(out_big), atol=2e-5
     )
-    from repro.kernels.flash_attention.ops import _vmem_bytes
-
-    assert _vmem_bytes(128, 128, 64, 4) > tiny_vmem.vmem_limit_bytes // 4
-    assert _vmem_bytes(32, 32, 64, 4) <= tiny_vmem.vmem_limit_bytes // 4
+    shapes = {"S": 64, "Skv": 64, "D": 64, "itemsize": 4}
+    cfg_small = tuning.resolve("nn_attention", shapes, tiny_vmem)
+    cfg_big = tuning.resolve("nn_attention", shapes, ex_big.hw)
+    assert cfg_small.fits_vmem
+    assert cfg_small.source.endswith("+shrunk")
+    assert cfg_small.vmem_bytes <= tiny_vmem.vmem_limit_bytes // tuning.VMEM_HEADROOM
+    assert cfg_small["block_q"] < cfg_big["block_q"]

@@ -3,7 +3,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, strategies as st
+from _hyp_compat import given, st
 
 from repro import sparse
 from repro.core import PallasInterpretExecutor, ReferenceExecutor, XlaExecutor, use_executor

@@ -7,7 +7,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, strategies as st
+from _hyp_compat import given, st
 
 from repro.checkpoint import CheckpointManager
 from repro.data import (
