@@ -209,6 +209,39 @@ def _spmv_sellp_runner(ex):
     return shapes, run
 
 
+def _spmv_batch_ell_runner(ex):
+    from repro import batch as batch_lib
+    from repro.kernels.spmv_batch_ell.kernel import spmv_batch_ell
+
+    rng = _np_rng()
+    nb, n = 32, 256
+    # one sparsity pattern shared across the batch (the fast path and the
+    # representative batched workload); independent patterns would union
+    # into a uselessly wide ELL block
+    pattern = rng.random((n, n)) < 0.05
+    stack = np.where(
+        pattern[None], rng.normal(size=(nb, n, n)).astype(np.float32), 0.0
+    )
+    A = batch_lib.batch_ell_from_dense(stack)
+    X = jnp.asarray(rng.normal(size=(nb, n)).astype(np.float32))
+    shapes = {
+        "nb": nb, "m": A.values.shape[1], "k": A.values.shape[2],
+        "n": n, "itemsize": 4,
+    }
+
+    def run(block):
+        return time_fn(
+            lambda: spmv_batch_ell(
+                A.col_idx, A.values, X,
+                block_m=block["block_m"], block_k=block["block_k"],
+                interpret=ex.interpret,
+            ),
+            warmup=1, repeats=3,
+        )
+
+    return shapes, run
+
+
 #: op -> (runner builder, kernel spaces the sweep applies to)
 RUNNERS: Dict[str, tuple] = {
     "nn_attention": (_attention_runner, ("pallas",)),
@@ -218,6 +251,7 @@ RUNNERS: Dict[str, tuple] = {
     "nn_ssd_scan": (_ssd_runner, ("pallas", "xla")),
     "spmv_ell": (_spmv_ell_runner, ("pallas",)),
     "spmv_sellp": (_spmv_sellp_runner, ("pallas",)),
+    "spmv_batch_ell": (_spmv_batch_ell_runner, ("pallas",)),
 }
 
 
@@ -230,6 +264,12 @@ def run(
     ex = make_executor(target)
     hw = ex.hw
     budget = hw.vmem_limit_bytes // tuning.VMEM_HEADROOM
+    if out is None:
+        out = os.path.join(os.path.dirname(__file__), "tuning", f"{hw.name}.json")
+    # preload the existing table so a subset sweep (--ops) refreshes only its
+    # ops and re-persists the rest unchanged
+    if os.path.exists(out):
+        tuning.load_table(out)
     for op, (builder, spaces) in RUNNERS.items():
         if ops and op not in ops:
             continue
@@ -260,9 +300,10 @@ def run(
             tuning.record_autotuned(op, hw.name, shapes, best[1])
             emit(f"autotune.{op}.winner.{_slug(best[1])}", best[0] * 1e6,
                  f"target={target}")
-    if out is None:
-        out = os.path.join(os.path.dirname(__file__), "tuning", f"{hw.name}.json")
-    n = tuning.save_table(out, target=hw.name)
+    # save everything in the cache (the preloaded file + this sweep's
+    # winners): filtering to hw.name here would drop other targets' entries
+    # when --out points at a shared multi-target table
+    n = tuning.save_table(out)
     print(f"# persisted {n} tuned entries -> {out}")
     return out
 

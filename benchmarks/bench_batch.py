@@ -1,0 +1,97 @@
+"""Batched linear algebra benchmark: one launch vs a loop of single solves.
+
+The paper's batched pitch is launch-count economics: N small systems in one
+kernel launch instead of N launches.  This benchmark measures both sides —
+``spmv_batch_ell`` against a loop of single-system ELL SpMVs, and the masked
+batched CG against a loop of single-system CG solves — and emits the usual
+``name,us_per_call,derived`` CSV lines with the batched-over-loop speedup.
+
+``run(smoke=True)`` is the CI smoke: one small batched solve end to end,
+asserting convergence so kernel-launch regressions fail the step rather than
+silently emitting garbage timings.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro import batch as batch_lib
+from repro import solvers, sparse
+from repro.core import XlaExecutor, use_executor
+from repro.launch.batch_solve import build_batch
+
+
+def _bench_spmv(nb: int, n: int) -> None:
+    rng = np.random.default_rng(11)
+    # one sparsity pattern shared across the batch — the representative
+    # batched workload; independent patterns would union into a near-dense
+    # ELL block and this would measure dense matvec economics instead
+    pattern = rng.random((n, n)) < 0.05
+    stack = np.where(
+        pattern[None], rng.normal(size=(nb, n, n)).astype(np.float32), 0.0
+    )
+    A = batch_lib.batch_ell_from_dense(stack)
+    X = jnp.asarray(rng.normal(size=(nb, n)).astype(np.float32))
+    singles = [A.system(b) for b in range(nb)]
+
+    with use_executor(XlaExecutor()):
+        batched = jax.jit(lambda X: batch_lib.apply_batch(A, X))
+        t_batch = time_fn(batched, X)
+
+        single = jax.jit(lambda A, x: sparse.apply(A, x))
+        def loop(X):
+            return [single(singles[b], X[b]) for b in range(nb)]
+        t_loop = time_fn(loop, X)
+
+    emit(f"batch_spmv_ell_nb{nb}_n{n}", t_batch * 1e6,
+         f"loop{t_loop*1e6:.1f}us_speedup{t_loop/t_batch:.1f}x")
+
+
+def _bench_solve(nb: int, n: int, *, smoke: bool = False) -> None:
+    A, B, xstar = build_batch(nb, n, fmt="ell")
+    stop = solvers.Stop(max_iters=200, reduction_factor=1e-6)
+
+    with use_executor(XlaExecutor()):
+        batched = jax.jit(lambda B: batch_lib.batch_cg(A, B, stop=stop))
+        res = batched(B)
+        conv = np.asarray(res.converged)
+        assert conv.all(), (
+            f"batched CG smoke failed: {int(conv.sum())}/{conv.size} converged"
+        )
+        err = np.abs(np.asarray(res.x) - xstar).max()
+        assert err < 1e-3, f"batched CG smoke solution error {err}"
+        t_batch = time_fn(batched, B, warmup=1, repeats=3)
+
+        if smoke:
+            iters = np.asarray(res.iterations)
+            emit(f"batch_cg_ell_nb{nb}_n{n}", t_batch * 1e6,
+                 f"iters{iters.min()}-{iters.max()}_allconverged")
+            return
+
+        single = jax.jit(
+            lambda A, b: solvers.cg(A, b, stop=stop),
+            static_argnums=(),
+        )
+        singles = [A.system(b) for b in range(nb)]
+        def loop(B):
+            return [single(singles[b], B[b]).x for b in range(nb)]
+        t_loop = time_fn(loop, B, warmup=1, repeats=3)
+
+    emit(f"batch_cg_ell_nb{nb}_n{n}", t_batch * 1e6,
+         f"loop{t_loop*1e6:.1f}us_speedup{t_loop/t_batch:.1f}x")
+
+
+def run(small: bool = False, smoke: bool = False) -> None:
+    if smoke:
+        _bench_solve(32, 32, smoke=True)
+        return
+    nb, n = (64, 48) if small else (256, 64)
+    _bench_spmv(nb, n)
+    _bench_solve(nb, n)
+
+
+if __name__ == "__main__":
+    run(small=True)

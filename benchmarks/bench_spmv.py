@@ -1,14 +1,11 @@
 """SpMV survey (paper Figs. 9-11): formats x matrix suite x executors.
 
 Reports GFLOP/s (2*nnz / t) and the fraction of the bandwidth-induced bound —
-the paper's performance-portability metric.  Bound per format (f32):
-
-    bytes/nnz: value 4 + column index 4 (+ row structure, amortized)
-    CSR/ELL ~ 8 B per 2 flops -> bound = BW/4
-    COO     ~ 12 B per 2 flops -> bound = BW/6
-    SELL-P  ~ 8 B per 2 flops on stored (padded) entries
-
-(The paper's f64 constants are BW/6 and BW/8; f32 halves the value bytes.)
+the paper's performance-portability metric.  The bound comes from each
+format's own ``memory_bytes`` accounting (``spmv_bandwidth_bound`` in
+benchmarks/common.py): stored values + index structure + the x/y vectors,
+2 flops per useful nonzero — so padded formats (ELL, SELL-P) are charged for
+the padding their kernels actually stream.
 """
 
 from __future__ import annotations
@@ -17,11 +14,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, matrix_suite, time_fn
+from benchmarks.common import emit, matrix_suite, spmv_bandwidth_bound, time_fn
 from repro import sparse
 from repro.core import PallasInterpretExecutor, XlaExecutor, use_executor
-
-BOUND_DIVISOR = {"coo": 6.0, "csr": 4.0, "ell": 4.0, "sellp": 4.0}
 
 
 def run(bandwidth: float, small: bool = False, pallas: bool = False) -> None:
@@ -48,7 +43,7 @@ def run(bandwidth: float, small: bool = False, pallas: bool = False) -> None:
                     fn = jax.jit(lambda x, A=A: sparse.apply(A, x))
                     t = time_fn(fn, x)
                     gflops = 2 * nnz / t / 1e9
-                    bound = bandwidth / BOUND_DIVISOR[fmt] / 1e9
+                    bound = spmv_bandwidth_bound(A, bandwidth, nnz) / 1e9
                     emit(
                         f"spmv_{ex_name}_{fmt}_{mat_name}",
                         t * 1e6,

@@ -31,6 +31,20 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
 
 
+def spmv_bandwidth_bound(A, bandwidth: float, nnz: int) -> float:
+    """Bandwidth-induced FLOP/s bound for one SpMV with format ``A``.
+
+    Uses the format's own ``memory_bytes`` accounting (values + index
+    structure, padding included — what the kernel actually streams) plus the
+    x gather and y write; 2 flops per *useful* nonzero.  Replaces the old
+    per-format bytes/nnz constants, which under-counted padded formats.
+    """
+    itemsize = np.dtype(A.dtype).itemsize
+    m, n = A.shape
+    bytes_moved = A.memory_bytes + (n + m) * itemsize
+    return bandwidth * 2 * nnz / bytes_moved
+
+
 # -- synthetic matrix suite -----------------------------------------------------------
 
 def stencil_2d(n_side: int) -> np.ndarray:

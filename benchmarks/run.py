@@ -9,7 +9,12 @@ Emits ``name,us_per_call,derived`` CSV lines:
   Roofline -> roofline        (LM cells from the dry-run artifacts, if present)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--full]
+     PYTHONPATH=src python -m benchmarks.run --smoke
      PYTHONPATH=src python -m benchmarks.run --autotune [--target NAME] [--out PATH]
+
+``--smoke`` is the CI gate: one batched solve end to end (asserting
+convergence), fast enough for every PR — kernel-launch regressions surface
+before merge instead of in the nightly figures.
 
 ``--autotune`` runs the launch-configuration sweep instead of the paper
 figures: it measures candidate tile geometries per op (benchmarks/autotune.py)
@@ -26,6 +31,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full-size matrices (slower; default: small suite)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: one batched solve end to end, assertive")
     ap.add_argument("--autotune", action="store_true",
                     help="sweep candidate kernel tilings and persist the "
                          "winners as a per-target tuning table")
@@ -41,6 +48,13 @@ def main() -> None:
         from benchmarks import autotune
 
         autotune.run(target=args.target, out=args.out)
+        return
+
+    if args.smoke:
+        from benchmarks import bench_batch
+
+        print("# batched-solve smoke (asserts convergence)")
+        bench_batch.run(smoke=True)
         return
 
     from benchmarks import bench_coop, bench_solvers, bench_spmv, bench_stream
@@ -63,6 +77,11 @@ def main() -> None:
 
     print("# krylov solvers (paper Figs. 12-14)")
     bench_solvers.run(bw, small=small)
+
+    print("# batched solves (one launch vs a loop of single solves)")
+    from benchmarks import bench_batch
+
+    bench_batch.run(small=small)
 
     # LM roofline cells (only if the dry-run artifacts exist)
     try:

@@ -1,0 +1,55 @@
+"""repro.batch — batched linear algebra (gko::batch::* analogue).
+
+Solve thousands of small independent sparse systems in one launch: batched
+formats with a shared-sparsity-pattern fast path (:mod:`repro.batch.formats`),
+executor-dispatched batched SpMV / BLAS-1 (:mod:`repro.batch.ops`), and masked
+batched Krylov solvers whose per-system convergence mask freezes finished
+systems inside one ``lax.while_loop`` (:mod:`repro.batch.solvers`).
+
+The multi-device driver (batch axis sharded across the mesh) lives in
+:mod:`repro.launch.batch_solve`.
+"""
+
+from repro.batch.formats import (
+    BatchCsr,
+    BatchEll,
+    batch_csr_from_dense,
+    batch_csr_from_list,
+    batch_ell_from_batch_csr,
+    batch_ell_from_dense,
+    batch_ell_from_list,
+)
+from repro.batch.ops import (
+    apply_batch,
+    batch_axpy,
+    batch_dot,
+    batch_norm2,
+    batch_scal,
+)
+from repro.batch.solvers import (
+    BatchSolveResult,
+    batch_bicgstab,
+    batch_cg,
+    batch_identity_preconditioner,
+    batch_jacobi_preconditioner,
+)
+
+__all__ = [
+    "BatchCsr",
+    "BatchEll",
+    "batch_csr_from_list",
+    "batch_ell_from_list",
+    "batch_csr_from_dense",
+    "batch_ell_from_dense",
+    "batch_ell_from_batch_csr",
+    "apply_batch",
+    "batch_dot",
+    "batch_axpy",
+    "batch_scal",
+    "batch_norm2",
+    "BatchSolveResult",
+    "batch_cg",
+    "batch_bicgstab",
+    "batch_jacobi_preconditioner",
+    "batch_identity_preconditioner",
+]

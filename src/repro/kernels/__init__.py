@@ -14,6 +14,7 @@ Layout: one directory per hot-spot, each with
 import repro.kernels.flash_attention.ops  # noqa: F401
 import repro.kernels.rmsnorm.ops  # noqa: F401
 import repro.kernels.rwkv6.ops  # noqa: F401
+import repro.kernels.spmv_batch_ell.ops  # noqa: F401
 import repro.kernels.spmv_ell.ops  # noqa: F401
 import repro.kernels.spmv_sellp.ops  # noqa: F401
 import repro.kernels.ssd.ops  # noqa: F401
@@ -21,6 +22,7 @@ import repro.kernels.ssd.ops  # noqa: F401
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.rmsnorm.kernel import rmsnorm
 from repro.kernels.rwkv6.kernel import rwkv6_scan, rwkv6_scan_log
+from repro.kernels.spmv_batch_ell.kernel import spmv_batch_ell
 from repro.kernels.spmv_ell.kernel import spmv_ell
 from repro.kernels.spmv_sellp.kernel import spmv_sellp
 from repro.kernels.ssd.kernel import ssd_scan
@@ -30,6 +32,7 @@ __all__ = [
     "rmsnorm",
     "rwkv6_scan",
     "rwkv6_scan_log",
+    "spmv_batch_ell",
     "spmv_ell",
     "spmv_sellp",
     "ssd_scan",

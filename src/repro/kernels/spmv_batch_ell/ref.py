@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the batched ELL SpMV kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_batch_ell_ref(
+    col_idx: jax.Array, values: jax.Array, x: jax.Array
+) -> jax.Array:
+    """``y[b] = A[b] @ x[b]``: shared ``col_idx (m, k)``, ``values (nb, m, k)``,
+    ``x (nb, n)`` -> ``(nb, m)``."""
+    gathered = x[:, col_idx]  # (nb, m, k)
+    return jnp.sum(values * gathered, axis=-1)

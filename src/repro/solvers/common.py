@@ -65,6 +65,16 @@ class Stop:
     abs_tol: float = 0.0
 
     def threshold(self, bnorm: jax.Array) -> jax.Array:
+        if self.reduction_factor == 0.0 and self.abs_tol == 0.0:
+            # Without this check an abs_tol-only criterion mistyped as
+            # (0.0, 0.0) silently yields threshold 0.0 — a solver that can
+            # never converge and always burns max_iters.
+            raise ValueError(
+                "degenerate stopping criterion: reduction_factor=0.0 with "
+                "abs_tol=0.0 can never be satisfied; set abs_tol > 0 for "
+                "absolute-tolerance-only stopping or reduction_factor > 0 "
+                "for relative stopping"
+            )
         return jnp.maximum(self.reduction_factor * bnorm, self.abs_tol)
 
 

@@ -36,6 +36,10 @@ def _register(cls, data_fields, meta_fields):
     return cls
 
 
+def _nbytes(*arrays: jax.Array) -> int:
+    return sum(int(a.size) * a.dtype.itemsize for a in arrays)
+
+
 @dataclasses.dataclass(frozen=True)
 class Dense:
     """Row-major dense matrix (gko::matrix::Dense)."""
@@ -49,6 +53,15 @@ class Dense:
     @property
     def dtype(self):
         return self.values.dtype
+
+    @property
+    def nnz(self) -> int:
+        """Stored entries (dense stores every entry)."""
+        return int(self.values.size)
+
+    @property
+    def memory_bytes(self) -> int:
+        return _nbytes(self.values)
 
 
 _register(Dense, ["values"], [])
@@ -71,6 +84,10 @@ class Coo:
     def dtype(self):
         return self.values.dtype
 
+    @property
+    def memory_bytes(self) -> int:
+        return _nbytes(self.row_idx, self.col_idx, self.values)
+
 
 _register(Coo, ["row_idx", "col_idx", "values"], ["shape"])
 
@@ -91,6 +108,10 @@ class Csr:
     @property
     def dtype(self):
         return self.values.dtype
+
+    @property
+    def memory_bytes(self) -> int:
+        return _nbytes(self.indptr, self.indices, self.values)
 
 
 _register(Csr, ["indptr", "indices", "values"], ["shape"])
@@ -115,6 +136,16 @@ class Ell:
     @property
     def dtype(self):
         return self.values.dtype
+
+    @property
+    def nnz(self) -> int:
+        """Stored entries ``m * max_nnz`` (Ginkgo's num_stored_elements:
+        padding is read by the kernel, so it is what memory bounds see)."""
+        return int(self.values.size)
+
+    @property
+    def memory_bytes(self) -> int:
+        return _nbytes(self.col_idx, self.values)
 
 
 _register(Ell, ["col_idx", "values"], ["shape"])
@@ -149,6 +180,15 @@ class Sellp:
     @property
     def dtype(self):
         return self.values.dtype
+
+    @property
+    def nnz(self) -> int:
+        """Stored (slice-padded) entries — what the kernels stream."""
+        return int(self.values.size)
+
+    @property
+    def memory_bytes(self) -> int:
+        return _nbytes(self.col_idx, self.values, self.slice_sets, self.slice_cols)
 
 
 _register(

@@ -1,0 +1,121 @@
+"""Batched formats: shared-pattern fast path, union-pattern conversion,
+batched SpMV vs a stack of dense matvecs — all executors."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import batch, sparse
+from repro.core import (
+    PallasInterpretExecutor,
+    ReferenceExecutor,
+    XlaExecutor,
+    use_executor,
+)
+import repro.kernels  # noqa: F401 — populate the pallas kernel space
+
+EXECUTORS = [ReferenceExecutor, XlaExecutor, PallasInterpretExecutor]
+
+
+def random_stack(rng, nb, m, n, density=0.2, shared=True):
+    if shared:
+        pattern = rng.random((m, n)) < density
+        return np.where(
+            pattern[None], rng.normal(size=(nb, m, n)).astype(np.float32), 0.0
+        )
+    stack = rng.normal(size=(nb, m, n)).astype(np.float32)
+    stack[rng.random(stack.shape) < 1 - density] = 0.0
+    return stack
+
+
+def test_shared_pattern_fast_path(rng):
+    """Identical patterns: one index array, stacked values, zero rebuilds."""
+    stack = random_stack(rng, 6, 20, 20, shared=True)
+    csrs = [sparse.csr_from_dense(a) for a in stack]
+    A = batch.batch_csr_from_list(csrs)
+    assert A.num_batch == 6
+    assert A.nnz == csrs[0].nnz
+    np.testing.assert_array_equal(np.asarray(A.indices), np.asarray(csrs[0].indices))
+    for b in range(6):
+        np.testing.assert_array_equal(np.asarray(A.values[b]), np.asarray(csrs[b].values))
+
+    ells = [sparse.ell_from_dense(a) for a in stack]
+    Ae = batch.batch_ell_from_list(ells)
+    np.testing.assert_array_equal(np.asarray(Ae.col_idx), np.asarray(ells[0].col_idx))
+
+
+def test_union_pattern_conversion(rng):
+    """Heterogeneous patterns rebuild on the union with explicit zeros."""
+    stack = random_stack(rng, 5, 18, 14, shared=False)
+    A = batch.batch_csr_from_list([sparse.csr_from_dense(a) for a in stack])
+    Ae = batch.batch_ell_from_list([sparse.ell_from_dense(a) for a in stack])
+    X = rng.normal(size=(5, 14)).astype(np.float32)
+    want = np.einsum("bmn,bn->bm", stack, X)
+    with use_executor(XlaExecutor()):
+        got_c = batch.apply_batch(A, jnp.asarray(X))
+        got_e = batch.apply_batch(Ae, jnp.asarray(X))
+    np.testing.assert_allclose(got_c, want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_e, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("exec_cls", EXECUTORS)
+@pytest.mark.parametrize("fmt", ["csr", "ell"])
+def test_batch_spmv_all_executors(rng, exec_cls, fmt):
+    stack = random_stack(rng, 7, 33, 29, shared=True)
+    build = batch.batch_csr_from_dense if fmt == "csr" else batch.batch_ell_from_dense
+    A = build(stack)
+    X = rng.normal(size=(7, 29)).astype(np.float32)
+    want = np.einsum("bmn,bn->bm", stack, X)
+    with use_executor(exec_cls()):
+        got = batch.apply_batch(A, jnp.asarray(X))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_system_extraction_roundtrip(rng):
+    stack = random_stack(rng, 4, 12, 12, shared=False)
+    A = batch.batch_csr_from_dense(stack)
+    with use_executor(ReferenceExecutor()):
+        for b in range(4):
+            np.testing.assert_allclose(
+                sparse.to_dense(A.system(b)), stack[b], atol=1e-6
+            )
+
+
+def test_batch_ell_from_batch_csr(rng):
+    stack = random_stack(rng, 5, 16, 16, shared=True)
+    Ac = batch.batch_csr_from_dense(stack)
+    Ae = batch.batch_ell_from_batch_csr(Ac)
+    X = rng.normal(size=(5, 16)).astype(np.float32)
+    want = np.einsum("bmn,bn->bm", stack, X)
+    with use_executor(XlaExecutor()):
+        got = batch.apply_batch(Ae, jnp.asarray(X))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_shape_mismatch_rejected(rng):
+    a = sparse.csr_from_dense(random_stack(rng, 1, 8, 8)[0])
+    b = sparse.csr_from_dense(random_stack(rng, 1, 9, 8)[0])
+    with pytest.raises(ValueError, match="share a shape"):
+        batch.batch_csr_from_list([a, b])
+    with pytest.raises(ValueError, match="empty list"):
+        batch.batch_csr_from_list([])
+
+
+def test_memory_accounting(rng):
+    """nnz / memory_bytes on batched and single formats agree with numpy."""
+    stack = random_stack(rng, 3, 10, 10, shared=True)
+    A = batch.batch_csr_from_dense(stack)
+    assert A.memory_bytes == (
+        A.indptr.size * 4 + A.indices.size * 4 + A.values.size * 4
+    )
+    single = sparse.csr_from_dense(stack[0])
+    assert single.memory_bytes == (
+        single.indptr.size * 4 + single.indices.size * 4 + single.nnz * 4
+    )
+    ell = sparse.ell_from_dense(stack[0])
+    assert ell.nnz == ell.values.size  # stored entries, padding included
+    assert ell.memory_bytes == ell.col_idx.size * 4 + ell.values.size * 4
+    sl = sparse.sellp_from_dense(stack[0])
+    assert sl.memory_bytes > 0 and sl.nnz == sl.values.size
+    dense = sparse.Dense(jnp.asarray(stack[0]))
+    assert dense.nnz == 100 and dense.memory_bytes == 400

@@ -1,0 +1,188 @@
+"""Masked batched Krylov solvers vs a loop of single-system solves.
+
+The acceptance gate for the batched subsystem: on a batch of >= 64 systems
+whose conditioning varies across the batch, the batched solver must agree
+with a loop of single-system solves — allclose solutions, exactly matching
+per-system converged flags — in all three kernel spaces, with per-system
+iteration counts differing across the batch (the convergence mask is doing
+real work, not a fixed batch-wide iteration count).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import batch, solvers
+from repro.core import (
+    PallasInterpretExecutor,
+    ReferenceExecutor,
+    XlaExecutor,
+    use_executor,
+)
+import repro.kernels  # noqa: F401 — populate the pallas kernel space
+
+NB, N = 64, 32
+STOP = solvers.Stop(max_iters=100, reduction_factor=1e-5)
+
+
+def spd_batch(nb=NB, n=N, nonsym=False, seed=3):
+    """Shifted tridiagonal systems; the shift cycles so iteration counts vary."""
+    rng = np.random.default_rng(seed)
+    idx = np.arange(n)
+    stack = np.zeros((nb, n, n), np.float32)
+    for b in range(nb):
+        a = stack[b]
+        a[idx, idx] = 3.0 + 2.0 * (b % 8)
+        a[idx[1:], idx[:-1]] = -1.0
+        a[idx[:-1], idx[1:]] = -1.0
+        if nonsym:
+            a += np.triu(rng.normal(size=(n, n)).astype(np.float32) * 0.05, 1)
+    xstar = rng.normal(size=(nb, n)).astype(np.float32)
+    B = np.einsum("bmn,bn->bm", stack, xstar)
+    return stack, xstar, B
+
+
+def _singles(fn, A, B, executor):
+    jfn = jax.jit(lambda A, b: fn(A, b, stop=STOP))
+    return [jfn(A.system(b), jnp.asarray(B[b])) for b in range(B.shape[0])]
+
+
+@pytest.mark.parametrize("exec_cls", [ReferenceExecutor, XlaExecutor,
+                                      PallasInterpretExecutor])
+def test_batch_cg_matches_single_solves(exec_cls):
+    stack, xstar, B = spd_batch()
+    A = batch.batch_ell_from_dense(stack)
+    ex = exec_cls()
+    with use_executor(ex):
+        res = jax.jit(lambda B: batch.batch_cg(A, B, stop=STOP))(jnp.asarray(B))
+        singles = _singles(solvers.cg, A, B, ex)
+
+    conv_b = np.asarray(res.converged)
+    conv_s = np.array([bool(s.converged) for s in singles])
+    np.testing.assert_array_equal(conv_b, conv_s)
+    assert conv_b.all()
+
+    xs = np.stack([np.asarray(s.x) for s in singles])
+    np.testing.assert_allclose(np.asarray(res.x), xs, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(res.x), xstar, atol=1e-3)
+
+    iters = np.asarray(res.iterations)
+    # the mask works: different systems stopped at different iterations, and
+    # none kept iterating after its single-system twin converged
+    assert len(np.unique(iters)) >= 4, iters
+    iters_s = np.array([int(s.iterations) for s in singles])
+    np.testing.assert_array_equal(iters, iters_s)
+
+
+@pytest.mark.parametrize("exec_cls", [ReferenceExecutor, XlaExecutor,
+                                      PallasInterpretExecutor])
+def test_batch_bicgstab_matches_single_solves(exec_cls):
+    stack, xstar, B = spd_batch(nonsym=True)
+    A = batch.batch_ell_from_dense(stack)
+    ex = exec_cls()
+    with use_executor(ex):
+        res = jax.jit(lambda B: batch.batch_bicgstab(A, B, stop=STOP))(
+            jnp.asarray(B)
+        )
+        singles = _singles(solvers.bicgstab, A, B, ex)
+
+    conv_b = np.asarray(res.converged)
+    conv_s = np.array([bool(s.converged) for s in singles])
+    np.testing.assert_array_equal(conv_b, conv_s)
+    assert conv_b.all()
+    xs = np.stack([np.asarray(s.x) for s in singles])
+    np.testing.assert_allclose(np.asarray(res.x), xs, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(res.x), xstar, atol=5e-3)
+    assert len(np.unique(np.asarray(res.iterations))) >= 3
+
+
+def test_batch_csr_format_agrees():
+    stack, xstar, B = spd_batch(nb=8)
+    Ac = batch.batch_csr_from_dense(stack)
+    Ae = batch.batch_ell_from_dense(stack)
+    with use_executor(XlaExecutor()):
+        rc = batch.batch_cg(Ac, jnp.asarray(B), stop=STOP)
+        re = batch.batch_cg(Ae, jnp.asarray(B), stop=STOP)
+    np.testing.assert_array_equal(
+        np.asarray(rc.iterations), np.asarray(re.iterations)
+    )
+    np.testing.assert_allclose(np.asarray(rc.x), np.asarray(re.x), atol=1e-4)
+
+
+def test_batch_jacobi_preconditioner_helps():
+    """Badly scaled diagonals: per-system Jacobi cuts iterations for every
+    system, and preconditioned results still match the known solutions."""
+    rng = np.random.default_rng(7)
+    nb, n = 16, 48
+    stack, _, _ = spd_batch(nb=nb, n=n)
+    d = 10.0 ** rng.uniform(-1.5, 1.5, size=(nb, n)).astype(np.float32)
+    stack = stack * np.sqrt(d[:, :, None] * d[:, None, :])
+    xstar = rng.normal(size=(nb, n)).astype(np.float32)
+    B = np.einsum("bmn,bn->bm", stack, xstar)
+    A = batch.batch_ell_from_dense(stack)
+    stop = solvers.Stop(max_iters=2000, reduction_factor=1e-6)
+    with use_executor(XlaExecutor()):
+        plain = batch.batch_cg(A, jnp.asarray(B), stop=stop)
+        M = batch.batch_jacobi_preconditioner(A)
+        pre = batch.batch_cg(A, jnp.asarray(B), stop=stop, M=M)
+    assert np.asarray(pre.converged).all()
+    np.testing.assert_allclose(np.asarray(pre.x), xstar, rtol=1e-2, atol=1e-2)
+    assert (np.asarray(pre.iterations) < np.asarray(plain.iterations)).all()
+
+
+def test_frozen_systems_do_not_drift():
+    """Once a system converges its state must not change while the rest of
+    the batch keeps iterating (the freeze, not just the exit, is correct):
+    capping the loop mid-batch leaves already-converged systems bit-identical
+    to the full run."""
+    stack, xstar, B = spd_batch(nb=16)
+    A = batch.batch_ell_from_dense(stack)
+    with use_executor(XlaExecutor()):
+        full = batch.batch_cg(A, jnp.asarray(B), stop=STOP)
+        iters = np.asarray(full.iterations)
+        cap = int(np.median(iters))  # between min and max convergence iters
+        capped = batch.batch_cg(
+            A, jnp.asarray(B),
+            stop=solvers.Stop(max_iters=cap, reduction_factor=1e-5),
+        )
+    early = np.asarray(capped.converged)
+    assert early.any() and not early.all()  # the cap really splits the batch
+    np.testing.assert_array_equal(
+        np.asarray(capped.iterations)[early], iters[early]
+    )
+    np.testing.assert_allclose(
+        np.asarray(capped.x)[early], np.asarray(full.x)[early],
+        rtol=0, atol=1e-7,
+    )
+
+
+def test_max_iters_caps_every_system():
+    stack, _, B = spd_batch(nb=8)
+    A = batch.batch_ell_from_dense(stack)
+    with use_executor(XlaExecutor()):
+        res = batch.batch_cg(
+            A, jnp.asarray(B),
+            stop=solvers.Stop(max_iters=2, reduction_factor=1e-12),
+        )
+    assert (np.asarray(res.iterations) == 2).all()
+    assert not np.asarray(res.converged).any()
+
+
+def test_abs_tol_only_stopping():
+    """The Stop fix: abs_tol-only criteria work, degenerate ones raise."""
+    stack, xstar, B = spd_batch(nb=8)
+    A = batch.batch_ell_from_dense(stack)
+    with use_executor(XlaExecutor()):
+        res = batch.batch_cg(
+            A, jnp.asarray(B),
+            stop=solvers.Stop(max_iters=200, reduction_factor=0.0, abs_tol=1e-3),
+        )
+    assert np.asarray(res.converged).all()
+    assert (np.asarray(res.residual_norms) <= 1e-3).all()
+
+    with pytest.raises(ValueError, match="degenerate stopping criterion"):
+        batch.batch_cg(
+            A, jnp.asarray(B),
+            stop=solvers.Stop(max_iters=5, reduction_factor=0.0, abs_tol=0.0),
+        )

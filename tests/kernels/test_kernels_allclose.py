@@ -71,6 +71,29 @@ def test_spmv_ell_blocks(rng, bm, bk, coop):
     np.testing.assert_allclose(np.asarray(want), a @ np.asarray(x), rtol=1e-3, atol=1e-4)
 
 
+@pytest.mark.parametrize(
+    "bm,bk,coop", [(64, 8, True), (128, 16, False), (37, 5, True)]
+)
+def test_spmv_batch_ell_blocks(rng, bm, bk, coop):
+    from repro import batch
+    from repro.kernels.spmv_batch_ell.kernel import spmv_batch_ell as kern
+    from repro.kernels.spmv_batch_ell.ref import spmv_batch_ell_ref
+
+    nb = 6
+    stack = rng.normal(size=(nb, 150, 97)).astype(np.float32)
+    stack[rng.random(stack.shape) < 0.85] = 0
+    A = batch.batch_ell_from_dense(stack)
+    X = jnp.asarray(rng.normal(size=(nb, 97)).astype(np.float32))
+    got = kern(A.col_idx, A.values, X, block_m=bm, block_k=bk,
+               use_coop=coop, interpret=True)
+    want = spmv_batch_ell_ref(A.col_idx, A.values, X)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(want), np.einsum("bmn,bn->bm", stack, np.asarray(X)),
+        rtol=1e-3, atol=1e-4,
+    )
+
+
 @given(m=st.integers(1, 120), n=st.integers(1, 90), seed=st.integers(0, 99))
 @settings(max_examples=10)
 def test_spmv_sellp_sweep(m, n, seed):

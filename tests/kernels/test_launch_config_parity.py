@@ -97,6 +97,62 @@ def test_spmv_parity(rng, fmt):
     _assert_all_match(outs, atol=1e-3)
 
 
+def test_spmv_batch_ell_parity(rng):
+    """Batched ELL SpMV: three-space parity with geometry resolved through
+    the launch-config subsystem (batch axis on the outer grid axis)."""
+    from repro import batch
+
+    nb, n = 9, 120
+    stack = rng.normal(size=(nb, n, n)).astype(np.float32)
+    stack[rng.random(stack.shape) < 0.85] = 0.0
+    A = batch.batch_ell_from_dense(stack)
+    X = jnp.asarray(rng.normal(size=(nb, n)).astype(np.float32))
+    outs = _spaces_outputs("spmv_batch_ell", A, X)
+    assert set(outs) == {"reference", "xla", "pallas"}
+    _assert_all_match(outs, atol=1e-3)
+
+
+def test_spmv_batch_ell_uses_launch_config(rng):
+    """The pallas binding resolves tile geometry via Executor.launch_config —
+    a pinned table override must change nothing numerically but be the
+    geometry the resolver hands back."""
+    from repro.core import tuning
+
+    shapes = {"nb": 8, "m": 64, "k": 16, "n": 64, "itemsize": 4}
+    ex = PallasInterpretExecutor()
+    base = ex.launch_config("spmv_batch_ell", shapes)
+    assert base.source.startswith("table")
+    assert set(base.block) == {"block_m", "block_k"}
+    try:
+        tuning.set_table_entry(
+            "spmv_batch_ell", ex.hw.name, {"block_m": 32, "block_k": 8}
+        )
+        pinned = ex.launch_config("spmv_batch_ell", shapes)
+        assert (pinned["block_m"], pinned["block_k"]) == (32, 8)
+    finally:
+        tuning._TABLE.pop(("spmv_batch_ell", ex.hw.name), None)
+
+
+def test_spmv_batch_ell_vmem_fallback(rng):
+    """A starved target still answers through the pallas space (xla kernel
+    inside the binding) and matches the oracle."""
+    import dataclasses
+
+    from repro import batch
+    from repro.core import params as hw_params
+
+    nb, n = 4, 96
+    stack = rng.normal(size=(nb, n, n)).astype(np.float32)
+    stack[rng.random(stack.shape) < 0.9] = 0.0
+    A = batch.batch_ell_from_dense(stack)
+    X = jnp.asarray(rng.normal(size=(nb, n)).astype(np.float32))
+    starved = dataclasses.replace(hw_params.CPU_INTERPRET, vmem_limit_bytes=1024)
+    ex = PallasInterpretExecutor(starved)
+    got = registry.operation("spmv_batch_ell")(A, X, executor=ex)
+    want = registry.operation("spmv_batch_ell")(A, X, executor=ReferenceExecutor())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
 def test_spmv_vmem_fallback_serves_pallas_space(rng):
     """A target whose VMEM cannot hold x still answers (via the xla kernel
     inside the pallas binding) and matches the oracle."""

@@ -106,6 +106,44 @@ def test_gmres_restart_sweep():
             assert bool(res.converged), m
 
 
+def test_gmres_multiple_restart_cycles():
+    """A system that cannot converge within one Krylov cycle of size m needs
+    >1 restart; the solver must still converge and report the *cumulative*
+    iteration count (a multiple of m, more than one cycle's worth)."""
+    a, xstar, b = nonsym_system(96)
+    A = sparse.csr_from_dense(a)
+    m = 4  # far below the ~n Krylov dimension this system wants
+    with use_executor(XlaExecutor()):
+        res = solvers.gmres(
+            A, jnp.asarray(b), restart=m,
+            stop=solvers.Stop(max_iters=400, reduction_factor=1e-6),
+        )
+    assert bool(res.converged)
+    k = int(res.iterations)
+    assert k > m, f"expected >1 restart cycle, got {k} iterations"
+    assert k % m == 0, f"cumulative count {k} must be whole cycles of {m}"
+    np.testing.assert_allclose(res.x, xstar, atol=5e-2)
+
+
+def test_stop_degenerate_criterion_raises():
+    """abs_tol-only stopping works; the all-zero criterion raises instead of
+    silently returning threshold 0.0 (which can never be met)."""
+    a, xstar, b = spd_system(48)
+    A = sparse.csr_from_dense(a)
+    with use_executor(XlaExecutor()):
+        res = solvers.cg(
+            A, jnp.asarray(b),
+            stop=solvers.Stop(max_iters=500, reduction_factor=0.0, abs_tol=1e-3),
+        )
+        assert bool(res.converged)
+        assert float(res.residual_norm) <= 1e-3
+        with pytest.raises(ValueError, match="degenerate stopping criterion"):
+            solvers.cg(
+                A, jnp.asarray(b),
+                stop=solvers.Stop(reduction_factor=0.0, abs_tol=0.0),
+            )
+
+
 def test_block_jacobi_preconditioner():
     """Block-Jacobi (Ginkgo's flagship) beats scalar Jacobi on block systems."""
     rng = np.random.default_rng(8)
