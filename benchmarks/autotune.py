@@ -209,6 +209,26 @@ def _spmv_sellp_runner(ex):
     return shapes, run
 
 
+def _block_jacobi_runner(ex):
+    from repro.kernels.block_jacobi.kernel import block_jacobi_apply
+
+    rng = _np_rng()
+    nb, bs = 512, 8
+    inv = jnp.asarray(rng.normal(size=(nb, bs, bs)).astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(nb, bs)).astype(np.float32))
+    shapes = {"nb": nb, "bs": bs, "itemsize": 4}
+
+    def run(block):
+        return time_fn(
+            lambda: block_jacobi_apply(
+                inv, vp, block_nb=block["block_nb"], interpret=ex.interpret
+            ),
+            warmup=1, repeats=3,
+        )
+
+    return shapes, run
+
+
 def _spmv_batch_ell_runner(ex):
     from repro import batch as batch_lib
     from repro.kernels.spmv_batch_ell.kernel import spmv_batch_ell
@@ -252,6 +272,7 @@ RUNNERS: Dict[str, tuple] = {
     "spmv_ell": (_spmv_ell_runner, ("pallas",)),
     "spmv_sellp": (_spmv_sellp_runner, ("pallas",)),
     "spmv_batch_ell": (_spmv_batch_ell_runner, ("pallas",)),
+    "block_jacobi": (_block_jacobi_runner, ("pallas",)),
 }
 
 

@@ -64,8 +64,62 @@ def run(bandwidth: float, small: bool = False) -> None:
                 )
 
 
+def precond_fixture(small: bool = False):
+    """Blocked SPD system with mixed per-block conditioning — the adaptive
+    block-Jacobi showcase fixture (well-conditioned blocks drop to 16-bit
+    storage, stretched ones stay fp32)."""
+    rng = np.random.default_rng(7)
+    n, bs = (512 if small else 2048), 8
+    a = np.zeros((n, n), np.float32)
+    for bi, s in enumerate(range(0, n, bs)):
+        blk = rng.normal(size=(bs, bs)).astype(np.float32)
+        blk = blk @ blk.T + 4 * np.eye(bs, dtype=np.float32)
+        if bi % 3 == 0:  # every third block badly scaled
+            scale = np.linspace(1.0, 30.0, bs).astype(np.float32)
+            blk = blk * np.sqrt(scale[:, None] * scale[None, :])
+        a[s : s + bs, s : s + bs] = blk
+    for i in range(n - bs):
+        a[i, i + bs] = a[i + bs, i] = 0.05
+    return a, bs
+
+
+def run_preconditioners(small: bool = False) -> None:
+    """Preconditioner survey (the adaptive block-Jacobi feature table):
+    CG iterations, wall time, and preconditioner storage per variant."""
+    a, bs = precond_fixture(small)
+    n = a.shape[0]
+    A = sparse.csr_from_dense(a)
+    rng = np.random.default_rng(0)
+    xstar = rng.normal(size=n).astype(np.float32)
+    b = jnp.asarray((a @ xstar).astype(np.float32))
+    stop = solvers.Stop(max_iters=1000, reduction_factor=1e-6)
+    with use_executor(XlaExecutor()):
+        variants = {
+            "identity": None,
+            "jacobi": solvers.jacobi_preconditioner(A),
+            "block_jacobi_fp32": solvers.block_jacobi_preconditioner(A, block_size=bs),
+            "block_jacobi_adaptive": solvers.block_jacobi_preconditioner(
+                A, block_size=bs, adaptive=True
+            ),
+        }
+        for name, M in variants.items():
+            res = solvers.cg(A, b, stop=stop, M=M)
+            t = time_fn(
+                lambda b, M=M: solvers.cg(A, b, stop=stop, M=M).x,
+                b, warmup=1, repeats=3,
+            )
+            storage = getattr(M, "storage_bytes", 0)
+            detail = f"iters{int(res.iterations)}_storage{storage}B"
+            counts = getattr(M, "precision_counts", None)
+            if counts:
+                detail += "_" + "+".join(f"{d}:{c}" for d, c in counts)
+            emit(f"precond_cg_{name}", t * 1e6, detail)
+            assert bool(res.converged), f"{name} failed to converge"
+
+
 if __name__ == "__main__":
     from benchmarks.bench_stream import run as stream_run
 
     bw = stream_run(sizes=(1 << 22,))
     run(bw, small=True)
+    run_preconditioners(small=True)

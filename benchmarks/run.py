@@ -78,6 +78,9 @@ def main() -> None:
     print("# krylov solvers (paper Figs. 12-14)")
     bench_solvers.run(bw, small=small)
 
+    print("# preconditioner survey (adaptive-precision block-Jacobi)")
+    bench_solvers.run_preconditioners(small=small)
+
     print("# batched solves (one launch vs a loop of single solves)")
     from benchmarks import bench_batch
 

@@ -29,6 +29,7 @@ from repro.batch.ops import (
 from repro.batch.solvers import (
     BatchSolveResult,
     batch_bicgstab,
+    batch_block_jacobi_preconditioner,
     batch_cg,
     batch_identity_preconditioner,
     batch_jacobi_preconditioner,
@@ -51,5 +52,6 @@ __all__ = [
     "batch_cg",
     "batch_bicgstab",
     "batch_jacobi_preconditioner",
+    "batch_block_jacobi_preconditioner",
     "batch_identity_preconditioner",
 ]

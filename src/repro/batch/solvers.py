@@ -37,6 +37,7 @@ __all__ = [
     "batch_cg",
     "batch_bicgstab",
     "batch_jacobi_preconditioner",
+    "batch_block_jacobi_preconditioner",
     "batch_identity_preconditioner",
 ]
 
@@ -68,8 +69,27 @@ def _apply(A: BatchMatrixLike, X: jax.Array, executor) -> jax.Array:
     return ops.apply_batch(A, X, executor=executor)
 
 
-def _setup(A, B, X0, M):
+def _setup(A, B, X0, M, executor=None, precond_opts=None):
     X = jnp.zeros_like(B) if X0 is None else X0
+    if isinstance(M, str):
+        opts = dict(precond_opts or {})
+        if M == "identity":
+            if opts:
+                raise ValueError(
+                    f"identity preconditioner takes no options, got {sorted(opts)}"
+                )
+            M = batch_identity_preconditioner
+        elif M == "jacobi":
+            M = batch_jacobi_preconditioner(A, executor=executor, **opts)
+        elif M == "block_jacobi":
+            M = batch_block_jacobi_preconditioner(A, executor=executor, **opts)
+        else:
+            raise KeyError(
+                f"unknown batched preconditioner kind {M!r}; known: "
+                "identity, jacobi, block_jacobi"
+            )
+    elif precond_opts:
+        raise ValueError("precond_opts is only meaningful when M is a kind name")
     M = M or batch_identity_preconditioner
     return X, M
 
@@ -149,6 +169,34 @@ def batch_jacobi_preconditioner(A: BatchMatrixLike, executor=None) -> Callable:
     return apply_m
 
 
+def batch_block_jacobi_preconditioner(
+    A: BatchMatrixLike,
+    block_size: Optional[int] = None,
+    *,
+    adaptive=False,
+    tau: Optional[float] = None,
+    executor=None,
+) -> Callable:
+    """Per-system block-Jacobi — ``gko::batch::preconditioner::Jacobi``, bs > 1.
+
+    Delegates to :func:`repro.precond.batch_block_jacobi`: the shared sparsity
+    pattern yields one host-side slot table, per-system blocks are gathered
+    and Gauss-Jordan-inverted in one batch, and ``adaptive`` selects a storage
+    precision per (system, block) with the same condition-estimate rule as the
+    single-system path (per-precision sub-batches span the whole batch).  The
+    returned object is callable on ``(nb, n)`` and reports ``storage_bytes``.
+    """
+    from repro.precond import batch_block_jacobi
+
+    return batch_block_jacobi(
+        A,
+        block_size,
+        adaptive=adaptive,
+        executor=executor,
+        **({} if tau is None else {"tau": tau}),
+    )
+
+
 def batch_identity_preconditioner(V: jax.Array) -> jax.Array:
     return V
 
@@ -164,7 +212,8 @@ def batch_cg(
     X0: Optional[jax.Array] = None,
     *,
     stop: Stop = Stop(),
-    M: Optional[Callable] = None,
+    M: Optional[Union[Callable, str]] = None,
+    precond_opts: Optional[dict] = None,
     executor=None,
 ) -> BatchSolveResult:
     """Batched preconditioned CG (SPD systems), per-system stopping.
@@ -174,7 +223,7 @@ def batch_cg(
     iterating; the loop exits when all have converged or ``max_iters`` hits.
     """
     ex = executor
-    X, M = _setup(A, B, X0, M)
+    X, M = _setup(A, B, X0, M, ex, precond_opts)
     nb = B.shape[0]
     bnorm = ops.batch_norm2(B, executor=ex)
     thresh = stop.threshold(bnorm)  # (nb,)
@@ -230,12 +279,13 @@ def batch_bicgstab(
     X0: Optional[jax.Array] = None,
     *,
     stop: Stop = Stop(),
-    M: Optional[Callable] = None,
+    M: Optional[Union[Callable, str]] = None,
+    precond_opts: Optional[dict] = None,
     executor=None,
 ) -> BatchSolveResult:
     """Batched preconditioned BiCGSTAB (general systems), per-system stopping."""
     ex = executor
-    X, M = _setup(A, B, X0, M)
+    X, M = _setup(A, B, X0, M, ex, precond_opts)
     nb = B.shape[0]
     bnorm = ops.batch_norm2(B, executor=ex)
     thresh = stop.threshold(bnorm)

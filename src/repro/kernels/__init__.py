@@ -11,6 +11,7 @@ Layout: one directory per hot-spot, each with
   ref.py    — the pure-jnp oracle the kernel is validated against
 """
 
+import repro.kernels.block_jacobi.ops  # noqa: F401
 import repro.kernels.flash_attention.ops  # noqa: F401
 import repro.kernels.rmsnorm.ops  # noqa: F401
 import repro.kernels.rwkv6.ops  # noqa: F401
@@ -19,6 +20,7 @@ import repro.kernels.spmv_ell.ops  # noqa: F401
 import repro.kernels.spmv_sellp.ops  # noqa: F401
 import repro.kernels.ssd.ops  # noqa: F401
 
+from repro.kernels.block_jacobi.kernel import block_jacobi_apply
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.rmsnorm.kernel import rmsnorm
 from repro.kernels.rwkv6.kernel import rwkv6_scan, rwkv6_scan_log
@@ -28,6 +30,7 @@ from repro.kernels.spmv_sellp.kernel import spmv_sellp
 from repro.kernels.ssd.kernel import ssd_scan
 
 __all__ = [
+    "block_jacobi_apply",
     "flash_attention",
     "rmsnorm",
     "rwkv6_scan",

@@ -1,0 +1,82 @@
+"""Registry binding: the block-Jacobi apply serves ``block_jacobi_apply``.
+
+Three kernel spaces:
+
+* ``reference`` — the sequential-semantics einsum oracle (:mod:`.ref`);
+* ``xla``       — the same formulation handed to the compiler (small batched
+  matvecs fuse well; Ginkgo's OpenMP slot);
+* ``pallas``    — the hardware-native tile kernel (:mod:`.kernel`), its block
+  batch tile resolved through ``Executor.launch_config`` with the registered
+  ``block_jacobi`` :class:`~repro.core.tuning.TuningSpec` — no hard-coded
+  geometry, per-target entries ride the same autotune cache / table override /
+  HardwareParams-seed chain as every other kernel family.
+"""
+
+from __future__ import annotations
+
+from repro.core import registry, tuning
+from repro.kernels.block_jacobi.kernel import block_jacobi_apply as bj_pallas
+from repro.kernels.block_jacobi.ref import block_jacobi_apply_ref
+
+
+def _vmem_bytes(shapes, block) -> int:
+    # inv-block tile (storage itemsize) + gathered segments and outputs (f32)
+    bnb = block["block_nb"]
+    bs = shapes.get("bs", 8)
+    itemsize = shapes.get("itemsize", 4)
+    return bnb * bs * bs * itemsize + 2 * bnb * bs * 4
+
+
+def _constrain(hw, shapes, block):
+    bnb = max(int(block["block_nb"]), hw.sublane_count)
+    bnb -= bnb % hw.sublane_count
+    return {"block_nb": bnb}
+
+
+BLOCK_JACOBI_SPEC = tuning.register_spec(
+    tuning.TuningSpec(
+        op="block_jacobi",
+        params=("block_nb",),
+        seed=lambda hw: {
+            # blocks are subwarp-sized (bs <= subgroup width), so a generous
+            # batch tile keeps the VPU fed without pressuring VMEM
+            "block_nb": max(hw.sublane_count * 16, 8),
+        },
+        vmem_bytes=_vmem_bytes,
+        constrain=_constrain,
+        floors={"block_nb": 8},
+        candidates=lambda hw, shapes: [
+            {"block_nb": hw.sublane_count * f} for f in (8, 16, 32, 64)
+        ],
+    )
+)
+
+
+def _block_jacobi_skeleton(ex, inv_blocks, vp, *, variant: str):
+    if variant != "pallas":
+        return block_jacobi_apply_ref(inv_blocks, vp)
+    cfg = ex.launch_config(
+        "block_jacobi",
+        {
+            "nb": inv_blocks.shape[0],
+            "bs": inv_blocks.shape[1],
+            "itemsize": inv_blocks.dtype.itemsize,
+        },
+    )
+    if not cfg.fits_vmem:
+        # no tile fits this target's budget — portable formulation instead
+        return block_jacobi_apply_ref(inv_blocks, vp)
+    return bj_pallas(
+        inv_blocks, vp, block_nb=cfg["block_nb"], interpret=ex.interpret
+    )
+
+
+registry.instantiate_common(
+    "block_jacobi_apply",
+    _block_jacobi_skeleton,
+    {
+        "reference": dict(variant="reference"),
+        "xla": dict(variant="xla"),
+        "pallas": dict(variant="pallas"),
+    },
+)

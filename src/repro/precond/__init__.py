@@ -1,0 +1,66 @@
+"""repro.precond — preconditioner subsystem (gko::preconditioner analogue).
+
+The flagship member is the adaptive-precision block-Jacobi
+(:mod:`repro.precond.block_jacobi`, arXiv:2006.16852): host-side block
+discovery, format-aware extraction, batched Gauss-Jordan inversion, and an
+executor-dispatched apply whose per-block storage precision is selected by a
+condition-number rule.  :func:`make_preconditioner` is the string-keyed
+factory the solvers use to resolve ``M="block_jacobi"``-style arguments.
+"""
+
+from __future__ import annotations
+
+from repro.precond.block_jacobi import (
+    ADAPTIVE_TAU,
+    BatchBlockJacobi,
+    BlockJacobi,
+    batch_block_jacobi,
+    block_jacobi,
+    invert_blocks,
+    natural_blocks,
+    select_block_precisions,
+    uniform_block_ptrs,
+)
+
+__all__ = [
+    "ADAPTIVE_TAU",
+    "BlockJacobi",
+    "BatchBlockJacobi",
+    "block_jacobi",
+    "batch_block_jacobi",
+    "invert_blocks",
+    "natural_blocks",
+    "select_block_precisions",
+    "uniform_block_ptrs",
+    "make_preconditioner",
+]
+
+
+def make_preconditioner(A, kind: str, *, executor=None, **opts):
+    """Resolve a preconditioner by name — the solvers' ``M=<str>`` path.
+
+    Kinds: ``identity``, ``jacobi`` (scalar), ``block_jacobi`` (accepts
+    ``block_size``/``blocks``/``adaptive``/``tau``), ``parilu``.
+    """
+    if kind == "identity":
+        if opts:
+            raise ValueError(
+                f"identity preconditioner takes no options, got {sorted(opts)}"
+            )
+        from repro.solvers.common import identity_preconditioner
+
+        return identity_preconditioner
+    if kind == "jacobi":
+        from repro.solvers.common import jacobi_preconditioner
+
+        return jacobi_preconditioner(A, executor=executor, **opts)
+    if kind == "block_jacobi":
+        return block_jacobi(A, executor=executor, **opts)
+    if kind == "parilu":
+        from repro.solvers.parilu import parilu_preconditioner
+
+        return parilu_preconditioner(A, **opts)
+    raise KeyError(
+        f"unknown preconditioner kind {kind!r}; known: "
+        "identity, jacobi, block_jacobi, parilu"
+    )

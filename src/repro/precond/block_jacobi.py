@@ -1,0 +1,613 @@
+"""Block-Jacobi preconditioner with adaptive per-block storage precision.
+
+The real ``gko::preconditioner::Jacobi``: the matrix's diagonal blocks are
+discovered host-side (setup time, like Ginkgo's ``generate``), extracted
+format-aware from CSR/ELL/SELL-P/COO/Dense without densifying, explicitly
+inverted by a batched Gauss-Jordan with partial pivoting, and applied as a
+batched small-matvec through the executor-dispatched ``block_jacobi_apply``
+kernel family (reference / xla / pallas spaces, tile geometry from the
+launch-configuration table).
+
+Adaptive precision (arXiv:2006.16852 §"adaptive precision block-Jacobi"):
+each inverted block is stored in the cheapest precision that preserves the
+preconditioner quality.  A per-block 1-norm condition estimate
+``kappa = ||B||_1 * ||B^-1||_1`` drives the rule
+
+    store in precision p  iff  kappa * u_p <= tau
+
+with ``u_p`` the unit roundoff of p (fp16: 2^-11, bf16: 2^-8) and ``tau`` the
+quality budget; fp16 additionally requires the inverse's entries to fit its
+narrow exponent range, with bf16 as the wide-range 16-bit fallback —
+otherwise the block stays in full precision.  Storage is *decoupled from
+arithmetic*: blocks are grouped into per-precision stacked sub-batches
+(static shapes — the apply stays jittable) and upcast to the vector's dtype
+inside the apply kernel, so reduced precision only shrinks the memory
+footprint and bandwidth, never the arithmetic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import registry
+from repro.sparse.formats import Coo, Csr, Dense, Ell, Sellp
+
+__all__ = [
+    "ADAPTIVE_TAU",
+    "BlockJacobi",
+    "block_jacobi",
+    "batch_block_jacobi",
+    "natural_blocks",
+    "uniform_block_ptrs",
+    "invert_blocks",
+    "select_block_precisions",
+]
+
+#: default quality budget for the adaptive storage-precision rule.
+ADAPTIVE_TAU = 1e-2
+
+#: unit roundoff per storage class (full precision keeps the input dtype).
+_UNIT_ROUNDOFF = {"bfloat16": 2.0**-8, "float16": 2.0**-11}
+#: largest finite fp16 magnitude (bf16 shares fp32's exponent range).
+_FP16_MAX = 65504.0
+
+block_jacobi_apply_op = registry.operation(
+    "block_jacobi_apply", "batched small-matvec y[b] = inv_blocks[b] @ v[b]"
+)
+
+# bind the kernel spaces (reference/xla/pallas) for the apply — the analogue
+# of linking the device backends; without this the op has no implementations
+import repro.kernels.block_jacobi.ops  # noqa: E402,F401
+
+
+# =============================================================================
+# Block discovery (host-side, setup time)
+# =============================================================================
+
+
+def uniform_block_ptrs(n: int, block_size: int) -> np.ndarray:
+    """Uniform partition of [0, n) into ceil(n / block_size) blocks."""
+    if block_size <= 0:
+        raise ValueError(f"block_size must be positive, got {block_size}")
+    return np.append(np.arange(0, n, block_size, dtype=np.int64), n)
+
+
+def _host_csr(A) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(indptr, indices, values) numpy triplet for any single-system format.
+
+    Setup-time conversion (Ginkgo's ``convert_to``); explicit stored zeros in
+    padded formats are dropped — they contribute nothing to the blocks.
+    """
+    if isinstance(A, Csr):
+        return np.asarray(A.indptr), np.asarray(A.indices), np.asarray(A.values)
+    if isinstance(A, Coo):
+        r = np.asarray(A.row_idx)
+        c = np.asarray(A.col_idx)
+        v = np.asarray(A.values)
+        m = A.shape[0]
+        indptr = np.zeros(m + 1, np.int64)
+        np.add.at(indptr, r + 1, 1)
+        return np.cumsum(indptr), c, v
+    if isinstance(A, Dense):
+        a = np.asarray(A.values)
+        r, c = np.nonzero(a)
+        m = a.shape[0]
+        indptr = np.zeros(m + 1, np.int64)
+        np.add.at(indptr, r + 1, 1)
+        return np.cumsum(indptr), c, a[r, c]
+    if isinstance(A, Ell):
+        cols = np.asarray(A.col_idx)
+        vals = np.asarray(A.values)
+        keep = vals != 0
+        m = A.shape[0]
+        counts = keep.sum(axis=1)
+        indptr = np.zeros(m + 1, np.int64)
+        indptr[1:] = np.cumsum(counts)
+        return indptr, cols[keep], vals[keep]
+    if isinstance(A, Sellp):
+        m = A.shape[0]
+        C = A.slice_size
+        slice_sets = np.asarray(A.slice_sets)
+        cols = np.asarray(A.col_idx)
+        vals = np.asarray(A.values)
+        rows_c, rows_v = [[] for _ in range(m)], [[] for _ in range(m)]
+        for s in range(A.num_slices):
+            lo, hi = int(slice_sets[s]), int(slice_sets[s + 1])
+            width = hi - lo
+            bc = cols[lo * C : hi * C].reshape(width, C)
+            bv = vals[lo * C : hi * C].reshape(width, C)
+            for r in range(min(C, m - s * C)):
+                keep = bv[:, r] != 0
+                rows_c[s * C + r].extend(bc[keep, r].tolist())
+                rows_v[s * C + r].extend(bv[keep, r].tolist())
+        counts = np.array([len(rc) for rc in rows_c], np.int64)
+        indptr = np.zeros(m + 1, np.int64)
+        indptr[1:] = np.cumsum(counts)
+        indices = np.asarray(
+            [c for rc in rows_c for c in rc], np.int64
+        ) if indptr[-1] else np.zeros(0, np.int64)
+        values = np.asarray(
+            [v for rv in rows_v for v in rv], vals.dtype
+        ) if indptr[-1] else np.zeros(0, vals.dtype)
+        return indptr, indices, values
+    raise TypeError(f"cannot extract diagonal blocks from {type(A)}")
+
+
+def natural_blocks(A, max_block_size: int = 8) -> np.ndarray:
+    """Supervariable-agglomeration block discovery (Ginkgo's natural blocks).
+
+    Consecutive rows join one block while they are coupled — row ``i+1`` has a
+    nonzero in some column the block already spans (or vice versa) — and the
+    block stays within ``max_block_size``.  Returns block pointers ``(nb+1,)``.
+    """
+    indptr, indices, _ = _host_csr(A)
+    n = A.shape[0]
+    ptrs = [0]
+    start = 0
+    for i in range(1, n):
+        size = i - start
+        if size >= max_block_size:
+            ptrs.append(i)
+            start = i
+            continue
+        row = indices[indptr[i] : indptr[i + 1]]
+        coupled = bool(((row >= start) & (row < i)).any())
+        if not coupled:
+            # symmetric check: does any block row reach column i?
+            for j in range(start, i):
+                cols = indices[indptr[j] : indptr[j + 1]]
+                if ((cols == i)).any():
+                    coupled = True
+                    break
+        if not coupled:
+            ptrs.append(i)
+            start = i
+    ptrs.append(n)
+    return np.asarray(ptrs, np.int64)
+
+
+def _extract_blocks_host(A, block_ptrs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Padded diagonal-block tensor ``(nb, bs, bs)`` + per-block sizes.
+
+    Format-aware gather over the sparsity structure — no densification.
+    Padding rows/cols carry an identity diagonal; structurally empty rows
+    inside a real block also fall back to identity (the regularization the
+    scale-only predecessor applied via a diagonal ridge).
+    """
+    indptr, indices, values = _host_csr(A)
+    sizes = np.diff(block_ptrs).astype(np.int64)
+    nb = len(sizes)
+    bs = int(sizes.max()) if nb else 1
+    dtype = values.dtype if values.size else np.float32
+    blocks = np.zeros((nb, bs, bs), dtype)
+    for b in range(nb):
+        lo, hi = int(block_ptrs[b]), int(block_ptrs[b + 1])
+        for i in range(lo, hi):
+            cols = indices[indptr[i] : indptr[i + 1]]
+            vals = values[indptr[i] : indptr[i + 1]]
+            keep = (cols >= lo) & (cols < hi)
+            blocks[b, i - lo, cols[keep] - lo] = vals[keep]
+        # identity padding beyond the block's true size
+        for l in range(hi - lo, bs):
+            blocks[b, l, l] = 1.0
+        # empty-row fallback: a structurally zero row cannot be inverted
+        for l in range(hi - lo):
+            if not blocks[b, l].any():
+                blocks[b, l, l] = 1.0
+    return blocks, sizes
+
+
+# =============================================================================
+# Batched Gauss-Jordan inversion (device, jittable)
+# =============================================================================
+
+
+def _gauss_jordan(a: jax.Array):
+    """Invert one (bs, bs) block by Gauss-Jordan with partial pivoting.
+
+    Returns ``(inverse, ok)``: ``ok`` is False when some elimination step
+    found no usable pivot — the block is rank-deficient and the "inverse"
+    (computed with the zero pivot substituted by 1 to keep the loop finite)
+    is garbage the caller must discard.
+    """
+    bs = a.shape[0]
+    aug = jnp.concatenate([a, jnp.eye(bs, dtype=a.dtype)], axis=1)
+
+    def step(k, carry):
+        aug, ok = carry
+        col = aug[:, k]
+        eligible = jnp.arange(bs) >= k
+        p = jnp.argmax(jnp.where(eligible, jnp.abs(col), -1.0))
+        rk, rp = aug[k], aug[p]
+        aug = aug.at[k].set(rp).at[p].set(rk)
+        piv = aug[k, k]
+        ok = ok & (jnp.abs(piv) > 0)
+        piv = jnp.where(jnp.abs(piv) > 0, piv, jnp.ones_like(piv))
+        row = aug[k] / piv
+        aug = aug.at[k].set(row)
+        factors = aug[:, k].at[k].set(0.0)
+        return aug - factors[:, None] * row[None, :], ok
+
+    aug, ok = jax.lax.fori_loop(0, bs, step, (aug, jnp.asarray(True)))
+    return aug[:, bs:], ok
+
+
+@jax.jit
+def invert_blocks(blocks: jax.Array) -> jax.Array:
+    """Batched explicit inversion of ``(nb, bs, bs)`` diagonal blocks.
+
+    Gauss-Jordan with partial pivoting (Ginkgo inverts Jacobi blocks the same
+    way on GPUs — one subwarp per block).  Rank-deficient blocks (pivot
+    exhausted mid-elimination) and any non-finite results degrade to an
+    identity fallback rather than silently preconditioning with garbage.
+    """
+    inv, ok = jax.vmap(_gauss_jordan)(blocks)
+    bad = ~ok[:, None, None] | ~jnp.all(
+        jnp.isfinite(inv), axis=(-2, -1), keepdims=True
+    )
+    eye = jnp.eye(blocks.shape[-1], dtype=blocks.dtype)
+    return jnp.where(bad, eye, inv)
+
+
+# =============================================================================
+# Adaptive storage-precision selection (host, setup time)
+# =============================================================================
+
+
+def _masked_norm1(t: np.ndarray, sizes: np.ndarray) -> np.ndarray:
+    """Per-block 1-norm restricted to each block's true (size, size) corner."""
+    nb, bs, _ = t.shape
+    idx = np.arange(bs)
+    valid = idx[None, :] < sizes[:, None]  # (nb, bs)
+    masked = np.abs(t) * valid[:, :, None] * valid[:, None, :]
+    return masked.sum(axis=1).max(axis=1)  # max column sum
+
+
+def select_block_precisions(
+    blocks: np.ndarray,
+    inv_blocks: np.ndarray,
+    sizes: np.ndarray,
+    *,
+    tau: float = ADAPTIVE_TAU,
+) -> np.ndarray:
+    """Per-block storage class: 0 = full precision, 1 = bf16, 2 = fp16.
+
+    The cheapest storage whose unit roundoff keeps ``kappa * u_p`` under the
+    quality budget; fp16 preferred among the 16-bit classes (more mantissa)
+    when the inverse's magnitudes fit its exponent range, bf16 as the
+    wide-range fallback.
+    """
+    kappa = np.maximum(
+        _masked_norm1(blocks, sizes) * _masked_norm1(inv_blocks, sizes), 1.0
+    )
+    maxabs = np.abs(inv_blocks).reshape(len(blocks), -1).max(axis=1)
+    fits_fp16 = (kappa * _UNIT_ROUNDOFF["float16"] <= tau) & (maxabs < _FP16_MAX)
+    fits_bf16 = kappa * _UNIT_ROUNDOFF["bfloat16"] <= tau
+    return np.where(fits_fp16, 2, np.where(fits_bf16, 1, 0)).astype(np.int32)
+
+
+def _storage_classes(base_dtype) -> Tuple:
+    return (jnp.dtype(base_dtype), jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16))
+
+
+def _class_ids(adaptive, blocks_np, inv_np, sizes, tau, base_dtype) -> np.ndarray:
+    nb = len(blocks_np)
+    if adaptive is False or adaptive is None:
+        return np.zeros(nb, np.int32)
+    if adaptive is True:
+        return select_block_precisions(blocks_np, inv_np, sizes, tau=tau)
+    # explicit dtype: force every block into that storage class
+    forced = jnp.dtype(adaptive)
+    for cid, d in enumerate(_storage_classes(base_dtype)):
+        if d == forced:
+            return np.full(nb, cid, np.int32)
+    raise ValueError(
+        f"adaptive={adaptive!r} is not a supported storage dtype "
+        f"(expected True/False or one of {_storage_classes(base_dtype)})"
+    )
+
+
+# =============================================================================
+# The preconditioner object
+# =============================================================================
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BlockJacobi:
+    """Generated block-Jacobi preconditioner: ``M^{-1} v`` via inverted blocks.
+
+    ``inv_blocks`` holds one stacked sub-batch per storage precision present
+    (class-ordered, static shapes); ``gather_idx``/``scatter_idx`` are the
+    host-precomputed maps between vector rows and (block, local-row) slots in
+    that class order.  Callable — use directly as a solver's ``M``.
+    """
+
+    inv_blocks: Tuple[jax.Array, ...]
+    gather_idx: jax.Array  # (nb, bs) int32; n = zero-pad slot
+    scatter_idx: jax.Array  # (n,) int32 into the flat (nb*bs,) apply output
+    n: int
+    block_size: int  # bs (padded/max block size)
+    num_blocks: int
+    executor: Optional[object] = None
+
+    @property
+    def storage_dtypes(self) -> Tuple[str, ...]:
+        return tuple(str(t.dtype) for t in self.inv_blocks)
+
+    @property
+    def precision_counts(self) -> Tuple[Tuple[str, int], ...]:
+        return tuple((str(t.dtype), int(t.shape[0])) for t in self.inv_blocks)
+
+    @property
+    def storage_bytes(self) -> int:
+        """Bytes held by the inverted-block storage (the adaptive metric)."""
+        return sum(int(t.size) * t.dtype.itemsize for t in self.inv_blocks)
+
+    def __call__(self, v: jax.Array) -> jax.Array:
+        if not self.inv_blocks:  # degenerate 0-row system
+            return v
+        vpad = jnp.concatenate([v, jnp.zeros((1,), v.dtype)])
+        vp = vpad[self.gather_idx]  # (nb, bs), class-ordered
+        outs = []
+        off = 0
+        for t in self.inv_blocks:
+            nbc = t.shape[0]
+            outs.append(
+                block_jacobi_apply_op(
+                    t, jax.lax.slice_in_dim(vp, off, off + nbc), executor=self.executor
+                )
+            )
+            off += nbc
+        y = jnp.concatenate(outs, axis=0).reshape(-1)
+        return y[self.scatter_idx]
+
+
+def block_jacobi(
+    A,
+    block_size: Optional[int] = None,
+    *,
+    blocks: Optional[Sequence[int]] = None,
+    adaptive: Union[bool, str, jnp.dtype] = False,
+    tau: float = ADAPTIVE_TAU,
+    executor=None,
+) -> BlockJacobi:
+    """Generate the block-Jacobi preconditioner for ``A``.
+
+    ``blocks`` pins explicit block pointers (e.g. from :func:`natural_blocks`);
+    otherwise the partition is uniform with ``block_size`` (default: the
+    executor's cooperative-subgroup width, Ginkgo's subwarp-tuned storage).
+    ``adaptive=True`` turns on per-block storage-precision selection;
+    a dtype forces every block into that storage.
+    """
+    n = A.shape[0]
+    if blocks is not None:
+        block_ptrs = np.asarray(blocks, np.int64)
+        if block_ptrs[0] != 0 or block_ptrs[-1] != n or (np.diff(block_ptrs) <= 0).any():
+            raise ValueError(
+                f"block pointers must cover [0, {n}) with positive sizes, "
+                f"got {block_ptrs}"
+            )
+    else:
+        if block_size is None:
+            from repro.core.executor import current_executor
+
+            ex = executor if executor is not None else current_executor()
+            block_size = ex.hw.subgroup_size
+        block_ptrs = uniform_block_ptrs(n, block_size)
+
+    blocks_np, sizes = _extract_blocks_host(A, block_ptrs)
+    nb, bs = blocks_np.shape[0], blocks_np.shape[1]
+    inv = invert_blocks(jnp.asarray(blocks_np))
+    inv_np = np.asarray(inv)
+    base_dtype = inv.dtype
+
+    class_id = _class_ids(adaptive, blocks_np, inv_np, sizes, tau, base_dtype)
+    order = np.argsort(class_id, kind="stable")
+
+    # gather/scatter maps in class order (host-precomputed, device gathers)
+    gather = np.full((nb, bs), n, np.int32)
+    scatter = np.zeros(n, np.int32)
+    for pos, b in enumerate(order):
+        lo, size = int(block_ptrs[b]), int(sizes[b])
+        gather[pos, :size] = np.arange(lo, lo + size, dtype=np.int32)
+        scatter[lo : lo + size] = pos * bs + np.arange(size, dtype=np.int32)
+
+    classes = _storage_classes(base_dtype)
+    tensors = []
+    sorted_ids = class_id[order]
+    for cid, dtype in enumerate(classes):
+        members = order[sorted_ids == cid]
+        if len(members) == 0:
+            continue
+        tensors.append(jnp.asarray(inv_np[members]).astype(dtype))
+
+    return BlockJacobi(
+        inv_blocks=tuple(tensors),
+        gather_idx=jnp.asarray(gather),
+        scatter_idx=jnp.asarray(scatter),
+        n=n,
+        block_size=bs,
+        num_blocks=nb,
+        executor=executor,
+    )
+
+
+# =============================================================================
+# Batched variant — gko::batch::preconditioner::Jacobi with bs > 1
+# =============================================================================
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BatchBlockJacobi:
+    """Per-system block-Jacobi over a shared-pattern batch.
+
+    Blocks of all systems are flattened into one class-ordered stack (the
+    per-precision sub-batches span the whole batch), so the apply is the same
+    executor-dispatched batched small-matvec as the single-system path.
+    """
+
+    inv_blocks: Tuple[jax.Array, ...]  # per class, (count, bs, bs)
+    perm: jax.Array  # (ns*nblocks,) int32 flat (system, block) -> class order
+    inv_perm: jax.Array  # inverse permutation
+    gather_idx: jax.Array  # (nblocks, bs) int32 into a padded system row
+    n: int
+    num_blocks: int  # per system
+    block_size: int
+    executor: Optional[object] = None
+
+    @property
+    def storage_bytes(self) -> int:
+        return sum(int(t.size) * t.dtype.itemsize for t in self.inv_blocks)
+
+    @property
+    def precision_counts(self) -> Tuple[Tuple[str, int], ...]:
+        return tuple((str(t.dtype), int(t.shape[0])) for t in self.inv_blocks)
+
+    def __call__(self, V: jax.Array) -> jax.Array:
+        ns = V.shape[0]
+        Vpad = jnp.concatenate([V, jnp.zeros((ns, 1), V.dtype)], axis=1)
+        vp = Vpad[:, self.gather_idx]  # (ns, nblocks, bs)
+        flat = vp.reshape(ns * self.num_blocks, self.block_size)[self.perm]
+        outs = []
+        off = 0
+        for t in self.inv_blocks:
+            nbc = t.shape[0]
+            outs.append(
+                block_jacobi_apply_op(
+                    t,
+                    jax.lax.slice_in_dim(flat, off, off + nbc),
+                    executor=self.executor,
+                )
+            )
+            off += nbc
+        y = jnp.concatenate(outs, axis=0)[self.inv_perm]
+        y = y.reshape(ns, self.num_blocks * self.block_size)
+        return y[:, : self.n]
+
+
+def _batch_slot_table(A, block_ptrs: np.ndarray, bs: int) -> np.ndarray:
+    """(nblocks, bs, bs) table of flat value slots (+1; 0 = structurally absent).
+
+    Built once from the shared sparsity pattern — per-system block extraction
+    is then a single gather over each system's value row.
+    """
+    from repro.batch.formats import BatchCsr, BatchEll
+
+    nb = len(block_ptrs) - 1
+    table = np.zeros((nb, bs, bs), np.int64)
+    if isinstance(A, BatchCsr):
+        indptr = np.asarray(A.indptr)
+        indices = np.asarray(A.indices)
+        for b in range(nb):
+            lo, hi = int(block_ptrs[b]), int(block_ptrs[b + 1])
+            for i in range(lo, hi):
+                for t in range(int(indptr[i]), int(indptr[i + 1])):
+                    j = int(indices[t])
+                    if lo <= j < hi:
+                        table[b, i - lo, j - lo] = t + 1
+        return table
+    if isinstance(A, BatchEll):
+        cols = np.asarray(A.col_idx)  # (m, k)
+        m, k = cols.shape
+        for b in range(nb):
+            lo, hi = int(block_ptrs[b]), int(block_ptrs[b + 1])
+            for i in range(lo, min(hi, m)):
+                for q in range(k):
+                    j = int(cols[i, q])
+                    # ELL padding is (col 0, value 0) at the row's tail; CSR
+                    # column order means a *real* col-0 entry sits at q == 0,
+                    # so any later col-0 slot is padding and must not
+                    # overwrite the real slot in the table
+                    if j == 0 and q > 0:
+                        continue
+                    if lo <= j < hi:
+                        table[b, i - lo, j - lo] = i * k + q + 1
+        return table
+    raise TypeError(f"unknown batched format {type(A)}")
+
+
+def batch_block_jacobi(
+    A,
+    block_size: Optional[int] = None,
+    *,
+    adaptive: Union[bool, str, jnp.dtype] = False,
+    tau: float = ADAPTIVE_TAU,
+    executor=None,
+) -> BatchBlockJacobi:
+    """Per-system block-Jacobi for a shared-pattern batched matrix."""
+    n = A.shape[0]
+    ns = A.num_batch
+    if block_size is None:
+        from repro.core.executor import current_executor
+
+        ex = executor if executor is not None else current_executor()
+        block_size = ex.hw.subgroup_size
+    block_ptrs = uniform_block_ptrs(n, block_size)
+    sizes = np.diff(block_ptrs).astype(np.int64)
+    nb = len(sizes)
+    bs = int(sizes.max()) if nb else 1
+
+    table = _batch_slot_table(A, block_ptrs, bs)
+    flat_vals = A.values.reshape(ns, -1)
+    padded = jnp.concatenate(
+        [jnp.zeros((ns, 1), A.dtype), flat_vals], axis=1
+    )
+    blocks = padded[:, jnp.asarray(table.reshape(-1))].reshape(ns, nb, bs, bs)
+
+    # identity on padding rows/cols beyond each block's true size
+    pad_diag = np.zeros((nb, bs), np.float32)
+    idx = np.arange(bs)
+    pad_diag[idx[None, :] >= sizes[:, None]] = 1.0
+    blocks = blocks + jnp.asarray(pad_diag[None, :, :, None] * np.eye(bs))
+    # per-system empty-row fallback: a block row that gathered only zeros
+    # (structurally empty row, or a system whose stored entries there are all
+    # zero) gets an identity diagonal — the same rule the single-system
+    # extraction applies host-side.  Structural detection via the slot table
+    # is not enough: an ELL padding slot at q == 0 is indistinguishable from
+    # a real col-0 entry, so the check must look at the gathered values.
+    row_zero = jnp.all(blocks == 0, axis=3)  # (ns, nb, bs)
+    eye = jnp.asarray(np.eye(bs, dtype=np.float32))
+    blocks = blocks + row_zero[..., None] * eye
+
+    flat_blocks = blocks.reshape(ns * nb, bs, bs)
+    inv = invert_blocks(flat_blocks)
+    inv_np = np.asarray(inv)
+    base_dtype = inv.dtype
+
+    flat_sizes = np.tile(sizes, ns)
+    class_id = _class_ids(
+        adaptive, np.asarray(flat_blocks), inv_np, flat_sizes, tau, base_dtype
+    )
+    order = np.argsort(class_id, kind="stable")
+    inv_perm = np.empty_like(order)
+    inv_perm[order] = np.arange(len(order))
+
+    classes = _storage_classes(base_dtype)
+    tensors = []
+    sorted_ids = class_id[order]
+    for cid, dtype in enumerate(classes):
+        members = order[sorted_ids == cid]
+        if len(members) == 0:
+            continue
+        tensors.append(jnp.asarray(inv_np[members]).astype(dtype))
+
+    gather = np.full((nb, bs), n, np.int32)
+    for b in range(nb):
+        lo, size = int(block_ptrs[b]), int(sizes[b])
+        gather[b, :size] = np.arange(lo, lo + size, dtype=np.int32)
+
+    return BatchBlockJacobi(
+        inv_blocks=tuple(tensors),
+        perm=jnp.asarray(order.astype(np.int32)),
+        inv_perm=jnp.asarray(inv_perm.astype(np.int32)),
+        gather_idx=jnp.asarray(gather),
+        n=n,
+        num_blocks=nb,
+        block_size=bs,
+        executor=executor,
+    )

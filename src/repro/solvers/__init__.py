@@ -2,6 +2,7 @@
 
 from repro.solvers.common import (
     LinearOperator,
+    ScalarJacobi,
     block_jacobi_preconditioner,
     SolveResult,
     Stop,
@@ -13,6 +14,7 @@ from repro.solvers.parilu import parilu_factorize, parilu_preconditioner, parilu
 
 __all__ = [
     "LinearOperator",
+    "ScalarJacobi",
     "SolveResult",
     "Stop",
     "jacobi_preconditioner",

@@ -9,7 +9,6 @@ Solvers are written against executor-dispatched BLAS-1/SpMV operations and
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, Optional, Union
 
 import jax
@@ -25,7 +24,9 @@ __all__ = [
     "LinearOperator",
     "SolveResult",
     "Stop",
+    "ScalarJacobi",
     "jacobi_preconditioner",
+    "block_jacobi_preconditioner",
     "identity_preconditioner",
 ]
 
@@ -118,80 +119,78 @@ def _extract_diag_xla(ex, A):
     return _extract_diag_ref(ex, A)
 
 
-def jacobi_preconditioner(A: MatrixLike, executor=None) -> Callable:
-    """Scalar Jacobi: M^{-1} v = v / diag(A) (gko::preconditioner::Jacobi, bs=1)."""
+class ScalarJacobi:
+    """Scalar Jacobi apply: ``M^{-1} v = inv_diag * v``.
+
+    ``inv_diag`` may be held in a reduced storage precision (the adaptive
+    knob); the apply upcasts to the vector's dtype, so reduced precision only
+    shrinks the stored footprint, never the arithmetic.
+    """
+
+    def __init__(self, inv_diag: jax.Array):
+        self.inv_diag = inv_diag
+
+    @property
+    def storage_bytes(self) -> int:
+        return int(self.inv_diag.size) * self.inv_diag.dtype.itemsize
+
+    def __call__(self, v: jax.Array) -> jax.Array:
+        return self.inv_diag.astype(v.dtype) * v
+
+
+def jacobi_preconditioner(
+    A: MatrixLike, executor=None, *, adaptive: Union[bool, str] = False
+) -> Callable:
+    """Scalar Jacobi: M^{-1} v = v / diag(A) (gko::preconditioner::Jacobi, bs=1).
+
+    ``adaptive=True`` stores the inverse diagonal in the cheapest 16-bit
+    precision whose range fits (fp16, else bf16); a dtype forces that storage.
+    Arithmetic stays in the vector's precision either way.
+    """
     d = extract_diag_op(A, executor=executor)
     safe = jnp.where(jnp.abs(d) > 0, d, jnp.ones_like(d))
     inv = jnp.where(jnp.abs(d) > 0, 1.0 / safe, jnp.ones_like(d))
-
-    def apply_m(v: jax.Array) -> jax.Array:
-        return inv * v
-
-    return apply_m
-
-
-extract_diag_blocks_op = registry.operation("extract_diag_blocks")
-
-
-@extract_diag_blocks_op.register("reference")
-def _extract_blocks_ref(ex, A, block_size: int):
-    """(nblocks, bs, bs) diagonal blocks; trailing block zero-padded.
-
-    Reference semantics densify (correct for every format); a format-aware
-    gather is the natural optimization for huge systems.
-    """
-    dense = sparse.to_dense(A, executor=ex)
-    n = dense.shape[0]
-    nb = -(-n // block_size)
-    pad = nb * block_size - n
-    if pad:
-        dense = jnp.pad(dense, ((0, pad), (0, pad)))
-    rows = dense.reshape(nb, block_size, nb * block_size)
-    blocks = jnp.stack(
-        [jax.lax.dynamic_slice_in_dim(rows[i], i * block_size, block_size, axis=1)
-         for i in range(nb)]
-    )
-    return blocks
-
-
-@extract_diag_blocks_op.register("xla")
-def _extract_blocks_xla(ex, A, block_size: int):
-    return _extract_blocks_ref(ex, A, block_size)
+    if adaptive is True:
+        maxabs = float(jnp.max(jnp.abs(inv))) if inv.size else 0.0
+        inv = inv.astype(jnp.float16 if maxabs < 65504.0 else jnp.bfloat16)
+    elif adaptive:
+        inv = inv.astype(jnp.dtype(adaptive))
+    return ScalarJacobi(inv)
 
 
 def block_jacobi_preconditioner(
-    A: MatrixLike, block_size: Optional[int] = None, executor=None
+    A: MatrixLike,
+    block_size: Optional[int] = None,
+    executor=None,
+    *,
+    blocks=None,
+    adaptive: Union[bool, str] = False,
+    tau: Optional[float] = None,
 ) -> Callable:
     """Block-Jacobi (gko::preconditioner::Jacobi with block size > 1):
     M^{-1} = blockdiag(A_11^{-1}, A_22^{-1}, ...) — Ginkgo's flagship
-    preconditioner for the solver benchmarks.
+    preconditioner.
 
+    Delegates to :mod:`repro.precond.block_jacobi`: host-side block discovery
+    (``blocks`` pins explicit pointers, e.g. from
+    :func:`repro.precond.natural_blocks`), format-aware extraction, batched
+    Gauss-Jordan inversion, and an executor-dispatched apply.
     ``block_size=None`` takes the executor's cooperative-subgroup width from
-    the hardware table (Ginkgo tunes Jacobi storage to the subwarp size).
-    Singular/padded blocks fall back to identity on their zero rows via a
-    diagonal ridge before inversion.
+    the hardware table (Ginkgo tunes Jacobi storage to the subwarp size);
+    ``adaptive`` selects per-block storage precision (see
+    :func:`repro.precond.block_jacobi`).  The returned object is callable and
+    reports ``storage_bytes`` / ``precision_counts``.
     """
-    if block_size is None:
-        from repro.core.executor import current_executor
+    from repro.precond import block_jacobi as _block_jacobi
 
-        ex = executor if executor is not None else current_executor()
-        block_size = ex.hw.subgroup_size
-    n = A.shape[0] if hasattr(A, "shape") else A.values.shape[0]
-    blocks = extract_diag_blocks_op(A, block_size, executor=executor)
-    nb = blocks.shape[0]
-    # regularize zero diagonal entries (padding / structurally empty rows)
-    diag = jnp.diagonal(blocks, axis1=1, axis2=2)
-    ridge = jnp.where(jnp.abs(diag) > 0, 0.0, 1.0)
-    blocks = blocks + jax.vmap(jnp.diag)(ridge)
-    inv_blocks = jnp.linalg.inv(blocks)  # (nb, bs, bs)
-
-    def apply_m(v: jax.Array) -> jax.Array:
-        pad = nb * block_size - v.shape[0]
-        vp = jnp.pad(v, (0, pad)) if pad else v
-        y = jnp.einsum("bij,bj->bi", inv_blocks, vp.reshape(nb, block_size))
-        return y.reshape(-1)[: v.shape[0]]
-
-    return apply_m
+    return _block_jacobi(
+        A,
+        block_size,
+        blocks=blocks,
+        adaptive=adaptive,
+        executor=executor,
+        **({} if tau is None else {"tau": tau}),
+    )
 
 
 def identity_preconditioner(v: jax.Array) -> jax.Array:

@@ -15,7 +15,7 @@ benchmarks run f32 by default and f64 under ``with jax.experimental.enable_x64()
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,10 +31,23 @@ from repro.sparse import ops as blas
 
 __all__ = ["cg", "fcg", "bicgstab", "cgs", "gmres"]
 
+#: a preconditioner argument: a callable ``v -> M^{-1} v`` or a kind name
+#: (``"jacobi"`` / ``"block_jacobi"`` / ``"parilu"`` / ``"identity"``) that
+#: :func:`repro.precond.make_preconditioner` resolves against ``A`` — the
+#: string path is how the ``adaptive`` storage knob threads through the
+#: solvers: ``cg(A, b, M="block_jacobi", precond_opts={"adaptive": True})``.
+Precond = Union[Callable, str]
 
-def _setup(A, b, x0, M, executor):
+
+def _setup(A, b, x0, M, executor, precond_opts=None):
     op = LinearOperator(A, executor=executor)
     x = jnp.zeros_like(b) if x0 is None else x0
+    if isinstance(M, str):
+        from repro.precond import make_preconditioner
+
+        M = make_preconditioner(A, M, executor=executor, **(precond_opts or {}))
+    elif precond_opts:
+        raise ValueError("precond_opts is only meaningful when M is a kind name")
     M = M or identity_preconditioner
     return op, x, M
 
@@ -45,11 +58,12 @@ def cg(
     x0: Optional[jax.Array] = None,
     *,
     stop: Stop = Stop(),
-    M: Optional[Callable] = None,
+    M: Optional[Precond] = None,
+    precond_opts: Optional[dict] = None,
     executor=None,
 ) -> SolveResult:
     """Preconditioned conjugate gradient (SPD systems)."""
-    op, x, M = _setup(A, b, x0, M, executor)
+    op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
     thresh = stop.threshold(bnorm)
@@ -86,12 +100,13 @@ def fcg(
     x0: Optional[jax.Array] = None,
     *,
     stop: Stop = Stop(),
-    M: Optional[Callable] = None,
+    M: Optional[Precond] = None,
+    precond_opts: Optional[dict] = None,
     executor=None,
 ) -> SolveResult:
     """Flexible CG (Ginkgo's FCG): Polak–Ribière beta = r'(r - r_prev)/rz_prev,
     robust to non-constant preconditioners."""
-    op, x, M = _setup(A, b, x0, M, executor)
+    op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
     thresh = stop.threshold(bnorm)
@@ -130,11 +145,12 @@ def bicgstab(
     x0: Optional[jax.Array] = None,
     *,
     stop: Stop = Stop(),
-    M: Optional[Callable] = None,
+    M: Optional[Precond] = None,
+    precond_opts: Optional[dict] = None,
     executor=None,
 ) -> SolveResult:
     """Preconditioned BiCGSTAB (general nonsymmetric systems)."""
-    op, x, M = _setup(A, b, x0, M, executor)
+    op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
     thresh = stop.threshold(bnorm)
@@ -176,12 +192,13 @@ def cgs(
     x0: Optional[jax.Array] = None,
     *,
     stop: Stop = Stop(),
-    M: Optional[Callable] = None,
+    M: Optional[Precond] = None,
+    precond_opts: Optional[dict] = None,
     executor=None,
 ) -> SolveResult:
     """Conjugate Gradient Squared (Sonneveld) — the paper's solver set's
     transpose-free nonsymmetric method."""
-    op, x, M = _setup(A, b, x0, M, executor)
+    op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
     thresh = stop.threshold(bnorm)
@@ -224,7 +241,8 @@ def gmres(
     *,
     restart: int = 30,
     stop: Stop = Stop(),
-    M: Optional[Callable] = None,
+    M: Optional[Precond] = None,
+    precond_opts: Optional[dict] = None,
     executor=None,
 ) -> SolveResult:
     """Restarted GMRES(m) with modified Gram-Schmidt Arnoldi + Givens rotations.
@@ -232,7 +250,7 @@ def gmres(
     Right-preconditioned: solves A M^{-1} u = b, x = M^{-1} u, so the true
     residual is available without extra applies.
     """
-    op, x, M = _setup(A, b, x0, M, executor)
+    op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     n = b.shape[0]
     m = restart

@@ -283,7 +283,9 @@ def sellp_from_csr_host(
     values = np.asarray(values)
     m, _ = shape
     C = slice_size
-    num_slices = max((m + C - 1) // C, 1)
+    # an empty matrix gets zero slices — not one phantom padded slice whose
+    # (col 0, value 0) entries would gather out of bounds from an empty x
+    num_slices = (m + C - 1) // C
     row_nnz = np.diff(indptr) if m else np.zeros(0, np.int64)
 
     slice_cols = np.zeros(num_slices, np.int32)
@@ -320,7 +322,7 @@ def sellp_from_csr_host(
         shape=tuple(shape),
         slice_size=C,
         stride_factor=stride_factor,
-        max_slice_cols=int(slice_cols.max()) if num_slices else 1,
+        max_slice_cols=int(slice_cols.max()) if num_slices else 0,
     )
 
 

@@ -221,10 +221,18 @@ def apply(A, x: jax.Array, *, executor=None) -> jax.Array:
         op = _FORMAT_OP[type(A)]
     except KeyError:
         raise TypeError(f"no spmv registered for format {type(A)}") from None
+    m, n = A.shape
+    if m == 0 or n == 0:
+        # degenerate operand: no kernel may launch (zero-size grids) and the
+        # padding convention (col 0) has no column 0 to gather — the product
+        # is empty or zero by definition
+        return jnp.zeros((m,) + x.shape[1:], dtype=jnp.result_type(A.dtype, x))
     return op(A, x, executor=executor)
 
 
 def to_dense(A, *, executor=None) -> jax.Array:
+    if 0 in A.shape:
+        return jnp.zeros(A.shape, A.dtype)
     return to_dense_op(A, executor=executor)
 
 

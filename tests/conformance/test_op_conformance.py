@@ -1,0 +1,175 @@
+"""Cross-executor conformance suite — the prerequisite for adding backends.
+
+The HIP-porting testimonial (arXiv:2006.14290) names systematic
+(format x operation x executor) coverage as what makes adding a backend safe:
+every combination must agree with the reference space before a new target can
+claim support.  This suite is that matrix for this repo:
+
+    (Coo / Csr / Ell / Sellp / Dense) x (spmv, to_dense, BLAS-1)
+        x (reference, xla, pallas-interpret)
+
+over hypothesis-generated sparsity patterns (the deterministic ``_hyp_compat``
+shim when hypothesis is absent).  Assertions are two-tier:
+
+* **structure is bitwise-stable**: shapes and dtypes match the reference
+  space exactly — a backend may not silently widen, pad, or promote;
+* **values agree** with the reference space to f32 tolerance.
+
+``REPRO_EXECUTOR`` restricts the executor axis (CI runs one job per backend:
+``REPRO_EXECUTOR=xla`` and ``REPRO_EXECUTOR=pallas_interpret``); unset, the
+full matrix runs.
+"""
+
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro import sparse
+from repro.core import make_executor, registry
+import repro.kernels  # noqa: F401 — populate the pallas kernel space
+
+_KINDS = ("reference", "xla", "pallas_interpret")
+_ENV = os.environ.get("REPRO_EXECUTOR", "").replace("-", "_")
+if _ENV:
+    if _ENV not in _KINDS:
+        raise ValueError(
+            f"REPRO_EXECUTOR={_ENV!r} is not a conformance executor; "
+            f"expected one of {_KINDS}"
+        )
+    EXEC_KINDS = (_ENV,)
+else:
+    EXEC_KINDS = _KINDS
+
+FORMATS = ("coo", "csr", "ell", "sellp", "dense")
+
+BUILD = {
+    "coo": sparse.coo_from_dense,
+    "csr": sparse.csr_from_dense,
+    "ell": sparse.ell_from_dense,
+    "sellp": sparse.sellp_from_dense,
+    "dense": lambda a: sparse.Dense(jnp.asarray(a)),
+}
+
+
+def _pattern(m, n, density, seed):
+    """Deterministic sparse matrix for a (shape, density, seed) sample."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, n)).astype(np.float32)
+    mask = rng.random((m, n)) < density
+    return np.where(mask, a, 0.0)
+
+
+def _reference():
+    return make_executor("reference")
+
+
+def _assert_conforms(got, ref, *, what, atol=1e-4):
+    got, ref_arr = jnp.asarray(got), jnp.asarray(ref)
+    assert got.shape == ref_arr.shape, (
+        f"{what}: shape {got.shape} != reference {ref_arr.shape}"
+    )
+    assert got.dtype == ref_arr.dtype, (
+        f"{what}: dtype {got.dtype} != reference {ref_arr.dtype}"
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64),
+        np.asarray(ref_arr, np.float64),
+        atol=atol,
+        rtol=1e-4,
+        err_msg=f"{what} diverged from the reference space",
+    )
+
+
+@pytest.mark.parametrize("exec_kind", EXEC_KINDS)
+@pytest.mark.parametrize("fmt", FORMATS)
+@settings(max_examples=6)
+@given(
+    m=st.integers(1, 48),
+    n=st.integers(1, 48),
+    density=st.floats(0.02, 0.8),
+    seed=st.integers(0, 10_000),
+)
+def test_spmv_conformance(fmt, exec_kind, m, n, density, seed):
+    a = _pattern(m, n, density, seed)
+    x = np.random.default_rng(seed + 1).normal(size=(n,)).astype(np.float32)
+    A = BUILD[fmt](a)
+    ref = sparse.apply(A, jnp.asarray(x), executor=_reference())
+    got = sparse.apply(A, jnp.asarray(x), executor=make_executor(exec_kind))
+    _assert_conforms(got, ref, what=f"spmv[{fmt}] on {exec_kind}", atol=1e-3)
+
+
+@pytest.mark.parametrize("exec_kind", EXEC_KINDS)
+@pytest.mark.parametrize("fmt", FORMATS)
+@settings(max_examples=4)
+@given(
+    m=st.integers(1, 32),
+    n=st.integers(1, 32),
+    density=st.floats(0.05, 0.9),
+    seed=st.integers(0, 10_000),
+)
+def test_to_dense_conformance(fmt, exec_kind, m, n, density, seed):
+    a = _pattern(m, n, density, seed)
+    A = BUILD[fmt](a)
+    ref = sparse.to_dense(A, executor=_reference())
+    got = sparse.to_dense(A, executor=make_executor(exec_kind))
+    _assert_conforms(got, ref, what=f"to_dense[{fmt}] on {exec_kind}")
+    # and both must reproduce the construction input exactly-ish
+    np.testing.assert_allclose(np.asarray(got), a, atol=1e-6)
+
+
+@pytest.mark.parametrize("exec_kind", EXEC_KINDS)
+@settings(max_examples=6)
+@given(n=st.integers(1, 300), seed=st.integers(0, 10_000))
+def test_blas1_conformance(exec_kind, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    alpha = jnp.float32(rng.normal())
+    ref_ex, ex = _reference(), make_executor(exec_kind)
+    for name, args in (
+        ("blas_dot", (x, y)),
+        ("blas_axpy", (alpha, x, y)),
+        ("blas_scal", (alpha, x)),
+        ("blas_norm2", (x,)),
+    ):
+        op = registry.operation(name)
+        ref = op(*args, executor=ref_ex)
+        got = op(*args, executor=ex)
+        _assert_conforms(got, ref, what=f"{name} on {exec_kind}", atol=1e-4)
+
+
+@pytest.mark.parametrize("exec_kind", EXEC_KINDS)
+@settings(max_examples=4)
+@given(
+    n=st.integers(4, 64),
+    bs=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 10_000),
+)
+def test_block_jacobi_apply_conformance(exec_kind, n, bs, seed):
+    """The new kernel family joins the conformance matrix like every op."""
+    rng = np.random.default_rng(seed)
+    nb = -(-n // bs)
+    inv = jnp.asarray(rng.normal(size=(nb, bs, bs)).astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(nb, bs)).astype(np.float32))
+    op = registry.operation("block_jacobi_apply")
+    ref = op(inv, vp, executor=_reference())
+    got = op(inv, vp, executor=make_executor(exec_kind))
+    _assert_conforms(got, ref, what=f"block_jacobi_apply on {exec_kind}", atol=1e-4)
+
+
+@pytest.mark.parametrize("exec_kind", EXEC_KINDS)
+def test_executor_reports_expected_space(exec_kind):
+    """The dispatch layer must actually route to the space the matrix names —
+    a conformance suite that silently tested reference three times would be
+    worthless."""
+    ex = make_executor(exec_kind)
+    op = registry.operation("spmv_ell")
+    expected = {
+        "reference": "reference",
+        "xla": "xla",
+        "pallas_interpret": "pallas",
+    }[exec_kind]
+    assert op.space_used(ex) == expected

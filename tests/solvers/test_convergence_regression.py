@@ -1,0 +1,168 @@
+"""Solver convergence regression suite: iteration counts are pinned.
+
+Every (solver x preconditioner) combination runs on a fixed fixture and must
+converge within a *recorded* iteration bound (measured counts + 15% slack for
+cross-platform float drift).  A solver or preconditioner change that degrades
+convergence fails loudly here instead of silently burning iterations in the
+benchmarks — Ginkgo's per-commit solver regression discipline.
+
+Recorded counts (jax 0.4.37, f32, CPU):
+
+    SPD (n=96):     cg / fcg
+      identity 17/17   jacobi 17/17   block_jacobi 12/12
+      adaptive_bj 12/12   parilu 6/6
+    nonsym (n=96):  bicgstab / cgs / gmres(30)
+      identity 11/10/30   jacobi 11/10/30   block_jacobi 8/7/30
+      adaptive_bj 8/7/30   parilu 3/3/30
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import sparse, solvers
+from repro.core import XlaExecutor, use_executor
+
+STOP = solvers.Stop(max_iters=500, reduction_factor=1e-6)
+
+
+def spd_system(n=96, rng=None):
+    rng = rng or np.random.default_rng(3)
+    a = np.zeros((n, n), np.float32)
+    for i in range(n):
+        a[i, i] = 4.0
+        if i > 0:
+            a[i, i - 1] = a[i - 1, i] = -1.0
+        if i > 2:
+            a[i, i - 3] = a[i - 3, i] = -0.5
+    x = rng.normal(size=n).astype(np.float32)
+    return a, x, (a @ x).astype(np.float32)
+
+
+def nonsym_system(n=96, rng=None):
+    rng = rng or np.random.default_rng(4)
+    a, x, _ = spd_system(n, rng)
+    a = a + np.triu(rng.normal(size=(n, n)).astype(np.float32) * 0.05, 1)
+    return a, x, (a @ x).astype(np.float32)
+
+
+def _preconditioner(name, A):
+    return {
+        "identity": lambda: None,
+        "jacobi": lambda: solvers.jacobi_preconditioner(A),
+        "block_jacobi": lambda: solvers.block_jacobi_preconditioner(A, block_size=4),
+        "adaptive_bj": lambda: solvers.block_jacobi_preconditioner(
+            A, block_size=4, adaptive=True
+        ),
+        "parilu": lambda: solvers.parilu_preconditioner(A),
+    }[name]()
+
+
+def _bound(recorded: int) -> int:
+    return int(np.ceil(recorded * 1.15))
+
+
+# (solver, preconditioner) -> recorded iteration count
+SPD_RECORDED = {
+    ("cg", "identity"): 17,
+    ("cg", "jacobi"): 17,
+    ("cg", "block_jacobi"): 12,
+    ("cg", "adaptive_bj"): 12,
+    ("cg", "parilu"): 6,
+    ("fcg", "identity"): 17,
+    ("fcg", "jacobi"): 17,
+    ("fcg", "block_jacobi"): 12,
+    ("fcg", "adaptive_bj"): 12,
+    ("fcg", "parilu"): 6,
+}
+
+NONSYM_RECORDED = {
+    ("bicgstab", "identity"): 11,
+    ("bicgstab", "jacobi"): 11,
+    ("bicgstab", "block_jacobi"): 8,
+    ("bicgstab", "adaptive_bj"): 8,
+    ("bicgstab", "parilu"): 3,
+    ("cgs", "identity"): 10,
+    ("cgs", "jacobi"): 10,
+    ("cgs", "block_jacobi"): 7,
+    ("cgs", "adaptive_bj"): 7,
+    ("cgs", "parilu"): 3,
+    ("gmres", "identity"): 30,
+    ("gmres", "jacobi"): 30,
+    ("gmres", "block_jacobi"): 30,
+    ("gmres", "adaptive_bj"): 30,
+    ("gmres", "parilu"): 30,
+}
+
+SOLVERS = {
+    "cg": solvers.cg,
+    "fcg": solvers.fcg,
+    "bicgstab": solvers.bicgstab,
+    "cgs": solvers.cgs,
+    "gmres": solvers.gmres,
+}
+
+
+@pytest.mark.parametrize("solver,precond", sorted(SPD_RECORDED))
+def test_spd_convergence_regression(solver, precond):
+    a, xstar, b = spd_system()
+    A = sparse.csr_from_dense(a)
+    with use_executor(XlaExecutor()):
+        M = _preconditioner(precond, A)
+        res = SOLVERS[solver](A, jnp.asarray(b), stop=STOP, M=M)
+    assert bool(res.converged), f"{solver}+{precond} failed to converge"
+    k, bound = int(res.iterations), _bound(SPD_RECORDED[(solver, precond)])
+    assert k <= bound, (
+        f"{solver}+{precond}: {k} iterations exceeds recorded bound {bound} "
+        f"— convergence regression"
+    )
+    np.testing.assert_allclose(np.asarray(res.x), xstar, atol=2e-3)
+
+
+@pytest.mark.parametrize("solver,precond", sorted(NONSYM_RECORDED))
+def test_nonsym_convergence_regression(solver, precond):
+    a, xstar, b = nonsym_system()
+    A = sparse.csr_from_dense(a)
+    with use_executor(XlaExecutor()):
+        M = _preconditioner(precond, A)
+        res = SOLVERS[solver](A, jnp.asarray(b), stop=STOP, M=M)
+    assert bool(res.converged), f"{solver}+{precond} failed to converge"
+    k, bound = int(res.iterations), _bound(NONSYM_RECORDED[(solver, precond)])
+    assert k <= bound, (
+        f"{solver}+{precond}: {k} iterations exceeds recorded bound {bound} "
+        f"— convergence regression"
+    )
+    np.testing.assert_allclose(np.asarray(res.x), xstar, atol=5e-2)
+
+
+def test_preconditioner_ordering_invariants():
+    """Stronger preconditioners may never lose to weaker ones on the SPD
+    fixture: parilu <= block_jacobi <= jacobi <= identity (iterations)."""
+    a, _, b = spd_system()
+    A = sparse.csr_from_dense(a)
+    with use_executor(XlaExecutor()):
+        iters = {
+            name: int(
+                solvers.cg(A, jnp.asarray(b), stop=STOP, M=_preconditioner(name, A)).iterations
+            )
+            for name in ("identity", "jacobi", "block_jacobi", "parilu")
+        }
+    assert iters["parilu"] <= iters["block_jacobi"] <= iters["jacobi"] <= iters["identity"], iters
+
+
+def test_string_preconditioner_path_matches_callable():
+    """The M=<kind-name> path (how adaptive threads through the solvers)
+    resolves to the same preconditioner the explicit factory builds."""
+    a, _, b = spd_system()
+    A = sparse.csr_from_dense(a)
+    with use_executor(XlaExecutor()):
+        via_str = solvers.cg(
+            A, jnp.asarray(b), stop=STOP, M="block_jacobi",
+            precond_opts={"block_size": 4, "adaptive": True},
+        )
+        via_call = solvers.cg(
+            A, jnp.asarray(b), stop=STOP,
+            M=solvers.block_jacobi_preconditioner(A, block_size=4, adaptive=True),
+        )
+    assert int(via_str.iterations) == int(via_call.iterations)
+    np.testing.assert_allclose(np.asarray(via_str.x), np.asarray(via_call.x), atol=1e-5)

@@ -1,0 +1,107 @@
+"""Degenerate-input behavior of the host-side format constructors.
+
+``ell_from_csr_host`` / ``sellp_from_csr_host`` (and the dense wrappers) must
+handle empty rows, all-zero matrices, empty matrices, and ``max_nnz=0``
+without NaN padding or structures whose apply would launch zero-size kernels
+or gather out of bounds (the col-0 padding convention has no column 0 when
+the matrix has no columns)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import sparse
+from repro.core import (
+    PallasInterpretExecutor,
+    ReferenceExecutor,
+    XlaExecutor,
+    use_executor,
+)
+
+EXECUTORS = [ReferenceExecutor, XlaExecutor, PallasInterpretExecutor]
+
+
+def _assert_finite(A):
+    vals = np.asarray(A.values)
+    assert np.isfinite(vals).all(), "constructor emitted non-finite padding"
+
+
+@pytest.mark.parametrize("builder", ["ell_from_dense", "sellp_from_dense"])
+@pytest.mark.parametrize("exec_cls", EXECUTORS)
+def test_empty_matrix(builder, exec_cls):
+    """0x0 build + apply: no NaNs, no zero-size kernel launch, empty result."""
+    A = getattr(sparse, builder)(np.zeros((0, 0), np.float32))
+    _assert_finite(A)
+    with use_executor(exec_cls()):
+        y = sparse.apply(A, jnp.zeros((0,), jnp.float32))
+    assert y.shape == (0,)
+    assert y.dtype == jnp.float32
+
+
+def test_sellp_empty_matrix_has_no_phantom_slice():
+    A = sparse.sellp_from_dense(np.zeros((0, 0), np.float32))
+    assert A.num_slices == 0
+    assert A.values.shape == (0,)
+    assert A.max_slice_cols == 0
+
+
+@pytest.mark.parametrize("builder", ["ell_from_dense", "sellp_from_dense"])
+@pytest.mark.parametrize("exec_cls", EXECUTORS)
+def test_all_zero_matrix(builder, exec_cls, rng):
+    """nnz=0 with nonzero shape: finite padding, zero product, f32 dtype."""
+    A = getattr(sparse, builder)(np.zeros((6, 9), np.float32))
+    _assert_finite(A)
+    assert A.dtype == jnp.float32
+    x = jnp.asarray(rng.normal(size=(9,)).astype(np.float32))
+    with use_executor(exec_cls()):
+        y = sparse.apply(A, x)
+    np.testing.assert_array_equal(np.asarray(y), np.zeros(6, np.float32))
+
+
+@pytest.mark.parametrize("exec_cls", EXECUTORS)
+def test_ell_explicit_max_nnz_zero(exec_cls):
+    """max_nnz=0 must clamp to one padded column, not a (m, 0) value block."""
+    A = sparse.ell_from_csr_host(
+        np.zeros(6, np.int64), np.zeros(0, np.int64),
+        np.zeros(0, np.float32), (5, 5), max_nnz=0,
+    )
+    assert A.values.shape == (5, 1)
+    _assert_finite(A)
+    with use_executor(exec_cls()):
+        y = sparse.apply(A, jnp.ones(5, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(y), np.zeros(5, np.float32))
+
+
+@pytest.mark.parametrize("builder", ["ell_from_dense", "sellp_from_dense"])
+@pytest.mark.parametrize("exec_cls", EXECUTORS)
+def test_empty_rows_interleaved(builder, exec_cls, rng):
+    """Rows with zero nnz inside an otherwise populated matrix."""
+    a = np.zeros((12, 12), np.float32)
+    a[3, 5] = 2.0
+    a[7, 0] = -1.5
+    a[7, 11] = 0.5
+    A = getattr(sparse, builder)(a)
+    _assert_finite(A)
+    x = jnp.asarray(rng.normal(size=(12,)).astype(np.float32))
+    with use_executor(exec_cls()):
+        y = sparse.apply(A, x)
+    np.testing.assert_allclose(np.asarray(y), a @ np.asarray(x), atol=1e-5)
+
+
+@pytest.mark.parametrize("builder", ["ell_from_dense", "sellp_from_dense"])
+def test_empty_to_dense_roundtrip(builder):
+    for shape in ((0, 0), (0, 4), (4, 0)):
+        A = getattr(sparse, builder)(np.zeros(shape, np.float32))
+        d = sparse.to_dense(A, executor=ReferenceExecutor())
+        assert d.shape == shape
+        assert not np.isnan(np.asarray(d)).any()
+
+
+def test_zero_column_matrix_apply():
+    """(m, 0) @ (0,) -> zeros(m): the col-0 padding has nothing to gather."""
+    a = np.zeros((5, 0), np.float32)
+    for builder in ("ell_from_dense", "sellp_from_dense", "csr_from_dense",
+                    "coo_from_dense"):
+        A = getattr(sparse, builder)(a)
+        y = sparse.apply(A, jnp.zeros((0,), jnp.float32), executor=XlaExecutor())
+        np.testing.assert_array_equal(np.asarray(y), np.zeros(5, np.float32))
