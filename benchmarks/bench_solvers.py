@@ -94,8 +94,11 @@ def run_preconditioners(small: bool = False) -> None:
     b = jnp.asarray((a @ xstar).astype(np.float32))
     stop = solvers.Stop(max_iters=1000, reduction_factor=1e-6)
     with use_executor(XlaExecutor()):
+        # every variant is a LinOp — the identity included — so the survey
+        # reads storage_bytes off the uniform interface, no isinstance
+        # checks or getattr defaults
         variants = {
-            "identity": None,
+            "identity": solvers.identity_preconditioner,
             "jacobi": solvers.jacobi_preconditioner(A),
             "block_jacobi_fp32": solvers.block_jacobi_preconditioner(A, block_size=bs),
             "block_jacobi_adaptive": solvers.block_jacobi_preconditioner(
@@ -108,13 +111,74 @@ def run_preconditioners(small: bool = False) -> None:
                 lambda b, M=M: solvers.cg(A, b, stop=stop, M=M).x,
                 b, warmup=1, repeats=3,
             )
-            storage = getattr(M, "storage_bytes", 0)
-            detail = f"iters{int(res.iterations)}_storage{storage}B"
+            detail = f"iters{int(res.iterations)}_storage{M.storage_bytes}B"
             counts = getattr(M, "precision_counts", None)
             if counts:
                 detail += "_" + "+".join(f"{d}:{c}" for d, c in counts)
             emit(f"precond_cg_{name}", t * 1e6, detail)
             assert bool(res.converged), f"{name} failed to converge"
+
+
+def run_ir(small: bool = False, smoke: bool = False) -> None:
+    """Mixed-precision iterative refinement survey (the LinOp showcase).
+
+    Solves the SPD suite to the f64 tolerance two ways — plain f64 CG vs an
+    IR outer loop whose inner CG runs on an f32 copy of A (half the operator
+    bytes per inner iteration) — and reports wall time, outer sweeps, and
+    inner-operator storage.  ``smoke=True`` runs one small system and asserts
+    convergence (the CI gate for the IR path).
+    """
+    from jax import experimental as jax_experimental
+
+    from repro.precond import unit_roundoff
+
+    suite = spd_suite(small or smoke)
+    if smoke:
+        name = "stencil2d_32"
+        suite = {name: suite[name]}
+    stop = solvers.Stop(max_iters=200, reduction_factor=1e-12)
+    with jax_experimental.enable_x64(True), use_executor(XlaExecutor()):
+        for mat_name, a in suite.items():
+            a = a.astype(np.float64)
+            n = a.shape[0]
+            A = sparse.csr_from_dense(a)
+            rng = np.random.default_rng(11)
+            xstar = rng.normal(size=n)
+            b = jnp.asarray(a @ xstar)
+
+            res64 = solvers.cg(A, b, stop=stop)
+            t64 = time_fn(
+                lambda b: solvers.cg(A, b, stop=stop).x, b, warmup=1, repeats=3
+            )
+            emit(
+                f"ir_cg_f64_{mat_name}", t64 * 1e6,
+                f"iters{int(res64.iterations)}_storage{A.memory_bytes}B",
+            )
+
+            # generation (the astype cast + inner-solver factory) happens once,
+            # outside the timer — like the f64 baseline's prebuilt A above
+            A_low = A.astype(jnp.float32)
+            inner = solvers.CgSolver(
+                A_low,
+                stop=solvers.Stop(
+                    max_iters=200,
+                    reduction_factor=unit_roundoff(jnp.float32) ** 0.5,
+                ),
+            )
+            solve_ir = lambda b: solvers.ir(  # noqa: E731
+                A, b, stop=stop, inner=inner, inner_dtype=jnp.float32
+            )
+            res_ir = solve_ir(b)
+            t_ir = time_fn(lambda b: solve_ir(b).x, b, warmup=1, repeats=3)
+            emit(
+                f"ir_mixed_f32_{mat_name}", t_ir * 1e6,
+                f"sweeps{int(res_ir.iterations)}_innerstorage{A_low.memory_bytes}B",
+            )
+            if smoke:
+                assert bool(res_ir.converged), "mixed-precision IR failed to converge"
+                err = float(jnp.abs(res_ir.x - xstar).max())
+                assert err < 1e-8, f"IR error {err} above f64 tolerance"
+                print(f"# ir smoke ok: {int(res_ir.iterations)} sweeps, err {err:.2e}")
 
 
 if __name__ == "__main__":
@@ -123,3 +187,4 @@ if __name__ == "__main__":
     bw = stream_run(sizes=(1 << 22,))
     run(bw, small=True)
     run_preconditioners(small=True)
+    run_ir(small=True)

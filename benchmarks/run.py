@@ -12,9 +12,10 @@ Run: PYTHONPATH=src python -m benchmarks.run [--full]
      PYTHONPATH=src python -m benchmarks.run --smoke
      PYTHONPATH=src python -m benchmarks.run --autotune [--target NAME] [--out PATH]
 
-``--smoke`` is the CI gate: one batched solve end to end (asserting
-convergence), fast enough for every PR — kernel-launch regressions surface
-before merge instead of in the nightly figures.
+``--smoke`` is the CI gate: one batched solve plus one mixed-precision IR
+solve end to end (asserting convergence), fast enough for every PR —
+kernel-launch and solver regressions surface before merge instead of in the
+nightly figures.
 
 ``--autotune`` runs the launch-configuration sweep instead of the paper
 figures: it measures candidate tile geometries per op (benchmarks/autotune.py)
@@ -32,7 +33,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full-size matrices (slower; default: small suite)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: one batched solve end to end, assertive")
+                    help="CI smoke: one batched solve + one mixed-precision "
+                         "IR solve end to end, assertive")
     ap.add_argument("--autotune", action="store_true",
                     help="sweep candidate kernel tilings and persist the "
                          "winners as a per-target tuning table")
@@ -51,10 +53,12 @@ def main() -> None:
         return
 
     if args.smoke:
-        from benchmarks import bench_batch
+        from benchmarks import bench_batch, bench_solvers
 
         print("# batched-solve smoke (asserts convergence)")
         bench_batch.run(smoke=True)
+        print("# mixed-precision IR smoke (asserts f64-tolerance convergence)")
+        bench_solvers.run_ir(smoke=True)
         return
 
     from benchmarks import bench_coop, bench_solvers, bench_spmv, bench_stream
@@ -80,6 +84,9 @@ def main() -> None:
 
     print("# preconditioner survey (adaptive-precision block-Jacobi)")
     bench_solvers.run_preconditioners(small=small)
+
+    print("# mixed-precision iterative refinement (f32 inner CG, f64 outer)")
+    bench_solvers.run_ir(small=small)
 
     print("# batched solves (one launch vs a loop of single solves)")
     from benchmarks import bench_batch

@@ -10,6 +10,14 @@ The multi-device driver (batch axis sharded across the mesh) lives in
 :mod:`repro.launch.batch_solve`.
 """
 
+from repro.batch.linop import (
+    BatchComposition,
+    BatchIdentity,
+    BatchLinOp,
+    BatchMatrixFreeOp,
+    BatchScaledIdentity,
+    BatchSum,
+)
 from repro.batch.formats import (
     BatchCsr,
     BatchEll,
@@ -27,6 +35,7 @@ from repro.batch.ops import (
     batch_scal,
 )
 from repro.batch.solvers import (
+    BatchScalarJacobi,
     BatchSolveResult,
     batch_bicgstab,
     batch_block_jacobi_preconditioner,
@@ -36,6 +45,12 @@ from repro.batch.solvers import (
 )
 
 __all__ = [
+    "BatchLinOp",
+    "BatchComposition",
+    "BatchSum",
+    "BatchScaledIdentity",
+    "BatchMatrixFreeOp",
+    "BatchIdentity",
     "BatchCsr",
     "BatchEll",
     "batch_csr_from_list",
@@ -49,6 +64,7 @@ __all__ = [
     "batch_scal",
     "batch_norm2",
     "BatchSolveResult",
+    "BatchScalarJacobi",
     "batch_cg",
     "batch_bicgstab",
     "batch_jacobi_preconditioner",

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.batch.linop import BatchLinOp
 from repro.sparse.formats import Csr, Ell, _nbytes
 
 __all__ = [
@@ -49,8 +50,25 @@ def _register(cls, data_fields, meta_fields):
     return cls
 
 
+class BatchMatrixLinOp(BatchLinOp):
+    """Common BatchLinOp behavior for the batched formats.
+
+    ``apply`` dispatches through the batched operation registry
+    (:func:`repro.batch.ops.apply_batch`) — kernels untouched.
+    """
+
+    def _apply(self, X, executor):
+        from repro.batch import ops
+
+        return ops.apply_batch(self, X, executor=executor)
+
+    def astype(self, dtype) -> "BatchMatrixLinOp":
+        """Same shared structure, values cast (the mixed-precision hook)."""
+        return dataclasses.replace(self, values=self.values.astype(dtype))
+
+
 @dataclasses.dataclass(frozen=True)
-class BatchCsr:
+class BatchCsr(BatchMatrixLinOp):
     """Batch of CSR matrices sharing one sparsity pattern.
 
     One index structure, stacked values — the storage Ginkgo's
@@ -88,7 +106,7 @@ _register(BatchCsr, ["indptr", "indices", "values"], ["shape"])
 
 
 @dataclasses.dataclass(frozen=True)
-class BatchEll:
+class BatchEll(BatchMatrixLinOp):
     """Batch of ELL matrices sharing one column-index block.
 
     Padding follows the single-system convention: ``col_idx == 0`` with a zero

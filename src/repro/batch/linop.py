@@ -1,0 +1,106 @@
+"""BatchLinOp — the batched analogue of the LinOp hierarchy.
+
+gko::batch::BatchLinOp: one operator whose apply maps a whole batch of
+right-hand sides ``X (nb, n)`` at once, with every system independent.  The
+combinators are the core ones specialized to the batch calling convention —
+``shape`` stays the *per-system* ``(m, n)`` (matching
+:class:`~repro.batch.formats.BatchCsr`), and ``num_batch`` reports the batch
+extent where one is known.
+
+Because the core combinators' apply logic is already shape-agnostic
+(compose right-to-left, sum termwise, scale elementwise), the batch variants
+inherit it and only add the batch face; the point of the distinct classes is
+the type marker the batched solvers accept (a plain LinOp is *not* a valid
+batched operator — its apply contract is a single vector).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.linop import (
+    Composition,
+    Identity,
+    LinOp,
+    MatrixFreeOp,
+    ScaledIdentity,
+    Sum,
+)
+
+__all__ = [
+    "BatchLinOp",
+    "BatchComposition",
+    "BatchSum",
+    "BatchScaledIdentity",
+    "BatchMatrixFreeOp",
+    "BatchIdentity",
+]
+
+
+class BatchLinOp(LinOp):
+    """Marker + interface base for batched operators.
+
+    ``apply(X)`` takes and returns ``(nb, n)`` batches; ``shape`` is the
+    per-system ``(m, n)``.
+    """
+
+    @property
+    def num_batch(self) -> Optional[int]:
+        return None
+
+    # the combinator sugar must stay inside the batched hierarchy — a plain
+    # Sum/Composition over batched operands would not be a valid BatchLinOp
+    def __matmul__(self, other):
+        if isinstance(other, BatchLinOp):
+            return BatchComposition(self, other)
+        return NotImplemented
+
+    def __add__(self, other):
+        if isinstance(other, BatchLinOp):
+            return BatchSum(self, other)
+        return NotImplemented
+
+
+def _first_num_batch(ops) -> Optional[int]:
+    for op in ops:
+        nb = getattr(op, "num_batch", None)
+        if nb is not None:
+            return nb
+    return None
+
+
+class BatchComposition(Composition, BatchLinOp):
+    """``(A o B o ...) X`` applied right to left, per system."""
+
+    @property
+    def num_batch(self) -> Optional[int]:
+        return _first_num_batch(self.ops)
+
+
+class BatchSum(Sum, BatchLinOp):
+    """``(A + B + ...) X`` termwise, per system."""
+
+    @property
+    def num_batch(self) -> Optional[int]:
+        return _first_num_batch(self.ops)
+
+
+class BatchScaledIdentity(ScaledIdentity, BatchLinOp):
+    """``sigma * I`` on every system — the batched shift building block."""
+
+
+class BatchMatrixFreeOp(MatrixFreeOp, BatchLinOp):
+    """User-supplied jittable batched apply ``X (nb, n) -> Y (nb, m)``."""
+
+    def __init__(self, matvec, shape=None, dtype=None, num_batch=None, executor=None):
+        super().__init__(matvec, shape=shape, dtype=dtype, executor=executor)
+        self._num_batch = num_batch
+
+    @property
+    def num_batch(self) -> Optional[int]:
+        return self._num_batch
+
+
+class BatchIdentity(Identity, BatchLinOp):
+    """The batched identity — also the batched identity preconditioner
+    (``storage_bytes == 0``)."""

@@ -148,10 +148,22 @@ _BATCH_FORMAT_OP = {
 
 
 def apply_batch(A, X: jax.Array, *, executor=None) -> jax.Array:
-    """``Y[b] = A[b] @ X[b]``: format-dispatch then executor-dispatch."""
+    """``Y[b] = A[b] @ X[b]``: format-dispatch then executor-dispatch.
+
+    Composed batched operators (``BatchSum``, ``BatchComposition``, ...)
+    delegate to their own ``apply``; the format fast path keeps dispatching
+    straight into the kernel registry.
+    """
     try:
         op = _BATCH_FORMAT_OP[type(A)]
     except KeyError:
+        from repro.batch.formats import BatchMatrixLinOp
+        from repro.batch.linop import BatchLinOp
+
+        # a BatchMatrixLinOp not in the table is an unregistered *format* —
+        # its _apply would bounce right back here, so fail loudly instead
+        if isinstance(A, BatchLinOp) and not isinstance(A, BatchMatrixLinOp):
+            return A.apply(X, executor=executor)
         raise TypeError(
             f"no batched spmv registered for format {type(A)}"
         ) from None

@@ -28,12 +28,14 @@ import jax.numpy as jnp
 
 from repro.batch import ops
 from repro.batch.formats import BatchCsr, BatchEll
+from repro.batch.linop import BatchIdentity, BatchLinOp
 from repro.core import registry
 from repro.solvers.common import Stop
 from repro.sparse.ops import _csr_row_ids
 
 __all__ = [
     "BatchSolveResult",
+    "BatchScalarJacobi",
     "batch_cg",
     "batch_bicgstab",
     "batch_jacobi_preconditioner",
@@ -41,7 +43,9 @@ __all__ = [
     "batch_identity_preconditioner",
 ]
 
-BatchMatrixLike = Union[BatchCsr, BatchEll, Callable[[jax.Array], jax.Array]]
+BatchMatrixLike = Union[
+    BatchLinOp, BatchCsr, BatchEll, Callable[[jax.Array], jax.Array]
+]
 
 
 @jax.tree_util.register_dataclass
@@ -64,6 +68,9 @@ class BatchSolveResult:
 
 
 def _apply(A: BatchMatrixLike, X: jax.Array, executor) -> jax.Array:
+    if isinstance(A, BatchLinOp):
+        # formats and composed operators alike — executor threads down
+        return A.apply(X, executor=executor)
     if callable(A) and not hasattr(A, "values"):
         return A(X)
     return ops.apply_batch(A, X, executor=executor)
@@ -152,21 +159,47 @@ def _batch_extract_diag_xla(ex, A):
     raise TypeError(f"unknown batched format {type(A)}")
 
 
-def batch_jacobi_preconditioner(A: BatchMatrixLike, executor=None) -> Callable:
+class BatchScalarJacobi(BatchLinOp):
+    """Per-system scalar Jacobi BatchLinOp: ``M^{-1} V[b] = inv_diag[b] * V[b]``."""
+
+    def __init__(self, inv_diag: jax.Array):
+        self.inv_diag = inv_diag  # (nb, n)
+
+    @property
+    def shape(self):
+        n = self.inv_diag.shape[1]
+        return (n, n)
+
+    @property
+    def num_batch(self) -> int:
+        return self.inv_diag.shape[0]
+
+    @property
+    def dtype(self):
+        return self.inv_diag.dtype
+
+    @property
+    def storage_bytes(self) -> int:
+        return int(self.inv_diag.size) * self.inv_diag.dtype.itemsize
+
+    def _apply(self, V: jax.Array, executor) -> jax.Array:
+        return self.inv_diag.astype(V.dtype) * V
+
+
+def batch_jacobi_preconditioner(
+    A: BatchMatrixLike, executor=None
+) -> BatchScalarJacobi:
     """Per-system scalar Jacobi: ``M^{-1} V[b] = V[b] / diag(A[b])``.
 
     The batched analogue of ``gko::batch::preconditioner::Jacobi`` (bs=1):
     one inverse-diagonal tensor ``(nb, n)``, one elementwise multiply per
-    application — no cross-system coupling.
+    application — no cross-system coupling.  Returns a BatchLinOp reporting
+    ``storage_bytes``.
     """
     d = batch_extract_diag_op(A, executor=executor)
     safe = jnp.where(jnp.abs(d) > 0, d, jnp.ones_like(d))
     inv = jnp.where(jnp.abs(d) > 0, 1.0 / safe, jnp.ones_like(d))
-
-    def apply_m(V: jax.Array) -> jax.Array:
-        return inv * V
-
-    return apply_m
+    return BatchScalarJacobi(inv)
 
 
 def batch_block_jacobi_preconditioner(
@@ -197,8 +230,10 @@ def batch_block_jacobi_preconditioner(
     )
 
 
-def batch_identity_preconditioner(V: jax.Array) -> jax.Array:
-    return V
+#: the batched identity preconditioner — a real BatchLinOp with
+#: ``storage_bytes == 0``; remains callable (``batch_identity_preconditioner(V)
+#: -> V``) for historical call sites.
+batch_identity_preconditioner = BatchIdentity()
 
 
 # =============================================================================

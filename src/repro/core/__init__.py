@@ -2,6 +2,10 @@
 
 Public surface:
 
+* :mod:`repro.core.linop` — the LinOp hierarchy (``gko::LinOp``): the one
+  ``apply`` interface every format, preconditioner, and solver composes
+  through, plus the combinators (Composition / Sum / ScaledIdentity /
+  Transpose / MatrixFreeOp / Identity).
 * :mod:`repro.core.executor` — the Executor hierarchy (Reference / Xla /
   PallasTpu / PallasInterpret) and the ambient-executor context.
 * :mod:`repro.core.registry` — operation registration and dynamic dispatch
@@ -12,6 +16,16 @@ Public surface:
   tuning tables + autotune cache) behind ``Executor.launch_config``.
 """
 
+from repro.core.linop import (
+    Composition,
+    Identity,
+    LinOp,
+    MatrixFreeOp,
+    ScaledIdentity,
+    Sum,
+    Transpose,
+    as_linop,
+)
 from repro.core.executor import (
     Executor,
     PallasInterpretExecutor,
@@ -46,6 +60,14 @@ from repro.core.tuning import LaunchConfig, TuningSpec
 from repro.core import coop, tuning
 
 __all__ = [
+    "LinOp",
+    "Composition",
+    "Sum",
+    "ScaledIdentity",
+    "Transpose",
+    "MatrixFreeOp",
+    "Identity",
+    "as_linop",
     "Executor",
     "ReferenceExecutor",
     "XlaExecutor",

@@ -20,6 +20,7 @@ from repro.precond.block_jacobi import (
     natural_blocks,
     select_block_precisions,
     uniform_block_ptrs,
+    unit_roundoff,
 )
 
 __all__ = [
@@ -32,6 +33,7 @@ __all__ = [
     "natural_blocks",
     "select_block_precisions",
     "uniform_block_ptrs",
+    "unit_roundoff",
     "make_preconditioner",
 ]
 

@@ -34,8 +34,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.batch.linop import BatchLinOp
 from repro.core import registry
-from repro.sparse.formats import Coo, Csr, Dense, Ell, Sellp
+from repro.core.linop import LinOp
+from repro.sparse.formats import csr_host_arrays
 
 __all__ = [
     "ADAPTIVE_TAU",
@@ -46,15 +48,25 @@ __all__ = [
     "uniform_block_ptrs",
     "invert_blocks",
     "select_block_precisions",
+    "unit_roundoff",
 ]
 
 #: default quality budget for the adaptive storage-precision rule.
 ADAPTIVE_TAU = 1e-2
 
-#: unit roundoff per storage class (full precision keeps the input dtype).
-_UNIT_ROUNDOFF = {"bfloat16": 2.0**-8, "float16": 2.0**-11}
 #: largest finite fp16 magnitude (bf16 shares fp32's exponent range).
 _FP16_MAX = 65504.0
+
+
+def unit_roundoff(dtype) -> float:
+    """Unit roundoff ``u = eps/2`` of a floating storage dtype.
+
+    The quantity the adaptive-precision rule multiplies by the condition
+    estimate (``kappa * u_p <= tau``); also what mixed-precision IR
+    (:mod:`repro.solvers.ir`) uses to budget its inner-solve tolerance.
+    fp16 -> 2^-11, bf16 -> 2^-8, f32 -> 2^-24, f64 -> 2^-53.
+    """
+    return float(jnp.finfo(jnp.dtype(dtype)).eps) / 2.0
 
 block_jacobi_apply_op = registry.operation(
     "block_jacobi_apply", "batched small-matvec y[b] = inv_blocks[b] @ v[b]"
@@ -80,62 +92,15 @@ def uniform_block_ptrs(n: int, block_size: int) -> np.ndarray:
 def _host_csr(A) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """(indptr, indices, values) numpy triplet for any single-system format.
 
-    Setup-time conversion (Ginkgo's ``convert_to``); explicit stored zeros in
-    padded formats are dropped — they contribute nothing to the blocks.
+    Delegates to :func:`repro.sparse.formats.csr_host_arrays` — the shared
+    setup-time conversion hub (Ginkgo's ``convert_to``); explicit stored
+    zeros in padded formats are dropped — they contribute nothing to the
+    blocks.
     """
-    if isinstance(A, Csr):
-        return np.asarray(A.indptr), np.asarray(A.indices), np.asarray(A.values)
-    if isinstance(A, Coo):
-        r = np.asarray(A.row_idx)
-        c = np.asarray(A.col_idx)
-        v = np.asarray(A.values)
-        m = A.shape[0]
-        indptr = np.zeros(m + 1, np.int64)
-        np.add.at(indptr, r + 1, 1)
-        return np.cumsum(indptr), c, v
-    if isinstance(A, Dense):
-        a = np.asarray(A.values)
-        r, c = np.nonzero(a)
-        m = a.shape[0]
-        indptr = np.zeros(m + 1, np.int64)
-        np.add.at(indptr, r + 1, 1)
-        return np.cumsum(indptr), c, a[r, c]
-    if isinstance(A, Ell):
-        cols = np.asarray(A.col_idx)
-        vals = np.asarray(A.values)
-        keep = vals != 0
-        m = A.shape[0]
-        counts = keep.sum(axis=1)
-        indptr = np.zeros(m + 1, np.int64)
-        indptr[1:] = np.cumsum(counts)
-        return indptr, cols[keep], vals[keep]
-    if isinstance(A, Sellp):
-        m = A.shape[0]
-        C = A.slice_size
-        slice_sets = np.asarray(A.slice_sets)
-        cols = np.asarray(A.col_idx)
-        vals = np.asarray(A.values)
-        rows_c, rows_v = [[] for _ in range(m)], [[] for _ in range(m)]
-        for s in range(A.num_slices):
-            lo, hi = int(slice_sets[s]), int(slice_sets[s + 1])
-            width = hi - lo
-            bc = cols[lo * C : hi * C].reshape(width, C)
-            bv = vals[lo * C : hi * C].reshape(width, C)
-            for r in range(min(C, m - s * C)):
-                keep = bv[:, r] != 0
-                rows_c[s * C + r].extend(bc[keep, r].tolist())
-                rows_v[s * C + r].extend(bv[keep, r].tolist())
-        counts = np.array([len(rc) for rc in rows_c], np.int64)
-        indptr = np.zeros(m + 1, np.int64)
-        indptr[1:] = np.cumsum(counts)
-        indices = np.asarray(
-            [c for rc in rows_c for c in rc], np.int64
-        ) if indptr[-1] else np.zeros(0, np.int64)
-        values = np.asarray(
-            [v for rv in rows_v for v in rv], vals.dtype
-        ) if indptr[-1] else np.zeros(0, vals.dtype)
-        return indptr, indices, values
-    raise TypeError(f"cannot extract diagonal blocks from {type(A)}")
+    try:
+        return csr_host_arrays(A)
+    except TypeError:
+        raise TypeError(f"cannot extract diagonal blocks from {type(A)}") from None
 
 
 def natural_blocks(A, max_block_size: int = 8) -> np.ndarray:
@@ -286,8 +251,8 @@ def select_block_precisions(
         _masked_norm1(blocks, sizes) * _masked_norm1(inv_blocks, sizes), 1.0
     )
     maxabs = np.abs(inv_blocks).reshape(len(blocks), -1).max(axis=1)
-    fits_fp16 = (kappa * _UNIT_ROUNDOFF["float16"] <= tau) & (maxabs < _FP16_MAX)
-    fits_bf16 = kappa * _UNIT_ROUNDOFF["bfloat16"] <= tau
+    fits_fp16 = (kappa * unit_roundoff(jnp.float16) <= tau) & (maxabs < _FP16_MAX)
+    fits_bf16 = kappa * unit_roundoff(jnp.bfloat16) <= tau
     return np.where(fits_fp16, 2, np.where(fits_bf16, 1, 0)).astype(np.int32)
 
 
@@ -318,13 +283,15 @@ def _class_ids(adaptive, blocks_np, inv_np, sizes, tau, base_dtype) -> np.ndarra
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
-class BlockJacobi:
-    """Generated block-Jacobi preconditioner: ``M^{-1} v`` via inverted blocks.
+class BlockJacobi(LinOp):
+    """Generated block-Jacobi preconditioner LinOp: ``M^{-1} v`` via inverted
+    blocks.
 
     ``inv_blocks`` holds one stacked sub-batch per storage precision present
     (class-ordered, static shapes); ``gather_idx``/``scatter_idx`` are the
     host-precomputed maps between vector rows and (block, local-row) slots in
-    that class order.  Callable — use directly as a solver's ``M``.
+    that class order.  A LinOp — use directly as a solver's ``M`` or inside
+    any operator composition.
     """
 
     inv_blocks: Tuple[jax.Array, ...]
@@ -334,6 +301,14 @@ class BlockJacobi:
     block_size: int  # bs (padded/max block size)
     num_blocks: int
     executor: Optional[object] = None
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n, self.n)
+
+    @property
+    def dtype(self):
+        return self.inv_blocks[0].dtype if self.inv_blocks else None
 
     @property
     def storage_dtypes(self) -> Tuple[str, ...]:
@@ -348,7 +323,7 @@ class BlockJacobi:
         """Bytes held by the inverted-block storage (the adaptive metric)."""
         return sum(int(t.size) * t.dtype.itemsize for t in self.inv_blocks)
 
-    def __call__(self, v: jax.Array) -> jax.Array:
+    def _apply(self, v: jax.Array, executor) -> jax.Array:
         if not self.inv_blocks:  # degenerate 0-row system
             return v
         vpad = jnp.concatenate([v, jnp.zeros((1,), v.dtype)])
@@ -359,7 +334,7 @@ class BlockJacobi:
             nbc = t.shape[0]
             outs.append(
                 block_jacobi_apply_op(
-                    t, jax.lax.slice_in_dim(vp, off, off + nbc), executor=self.executor
+                    t, jax.lax.slice_in_dim(vp, off, off + nbc), executor=executor
                 )
             )
             off += nbc
@@ -443,8 +418,8 @@ def block_jacobi(
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
-class BatchBlockJacobi:
-    """Per-system block-Jacobi over a shared-pattern batch.
+class BatchBlockJacobi(BatchLinOp):
+    """Per-system block-Jacobi over a shared-pattern batch — a BatchLinOp.
 
     Blocks of all systems are flattened into one class-ordered stack (the
     per-precision sub-batches span the whole batch), so the apply is the same
@@ -461,6 +436,14 @@ class BatchBlockJacobi:
     executor: Optional[object] = None
 
     @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n, self.n)
+
+    @property
+    def dtype(self):
+        return self.inv_blocks[0].dtype if self.inv_blocks else None
+
+    @property
     def storage_bytes(self) -> int:
         return sum(int(t.size) * t.dtype.itemsize for t in self.inv_blocks)
 
@@ -468,7 +451,7 @@ class BatchBlockJacobi:
     def precision_counts(self) -> Tuple[Tuple[str, int], ...]:
         return tuple((str(t.dtype), int(t.shape[0])) for t in self.inv_blocks)
 
-    def __call__(self, V: jax.Array) -> jax.Array:
+    def _apply(self, V: jax.Array, executor) -> jax.Array:
         ns = V.shape[0]
         Vpad = jnp.concatenate([V, jnp.zeros((ns, 1), V.dtype)], axis=1)
         vp = Vpad[:, self.gather_idx]  # (ns, nblocks, bs)
@@ -481,7 +464,7 @@ class BatchBlockJacobi:
                 block_jacobi_apply_op(
                     t,
                     jax.lax.slice_in_dim(flat, off, off + nbc),
-                    executor=self.executor,
+                    executor=executor,
                 )
             )
             off += nbc

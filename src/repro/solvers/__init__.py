@@ -1,4 +1,10 @@
-"""repro.solvers — Krylov subspace solvers (Ginkgo's solver set), executor-agnostic."""
+"""repro.solvers — Krylov subspace solvers (Ginkgo's solver set), executor-agnostic.
+
+Every solver function has a factory-style LinOp twin (``CgSolver`` etc.) so a
+generated solver composes as an operator — the Ginkgo solver-as-preconditioner
+pattern — and :mod:`repro.solvers.ir` builds mixed-precision iterative
+refinement on top of that interface.
+"""
 
 from repro.solvers.common import (
     LinearOperator,
@@ -9,8 +15,26 @@ from repro.solvers.common import (
     identity_preconditioner,
     jacobi_preconditioner,
 )
-from repro.solvers.krylov import bicgstab, cg, cgs, fcg, gmres
-from repro.solvers.parilu import parilu_factorize, parilu_preconditioner, parilu_setup
+from repro.solvers.krylov import (
+    BicgstabSolver,
+    CgSolver,
+    CgsSolver,
+    FcgSolver,
+    GmresSolver,
+    KrylovSolver,
+    bicgstab,
+    cg,
+    cgs,
+    fcg,
+    gmres,
+)
+from repro.solvers.ir import IrSolver, ir, mixed_precision_ir
+from repro.solvers.parilu import (
+    ParILU,
+    parilu_factorize,
+    parilu_preconditioner,
+    parilu_setup,
+)
 
 __all__ = [
     "LinearOperator",
@@ -25,6 +49,16 @@ __all__ = [
     "bicgstab",
     "cgs",
     "gmres",
+    "ir",
+    "mixed_precision_ir",
+    "KrylovSolver",
+    "CgSolver",
+    "FcgSolver",
+    "BicgstabSolver",
+    "CgsSolver",
+    "GmresSolver",
+    "IrSolver",
+    "ParILU",
     "parilu_factorize",
     "parilu_preconditioner",
     "parilu_setup",

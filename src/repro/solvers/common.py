@@ -1,24 +1,32 @@
-"""Shared solver machinery: LinearOperator, results, stopping criteria.
+"""Shared solver machinery: results, stopping criteria, scalar preconditioners.
 
 Solvers are written against executor-dispatched BLAS-1/SpMV operations and
 ``jax.lax`` control flow only, so one solver source serves every executor
 (the paper's separation of algorithm from kernels) and distributes under
 ``pjit`` by sharding the operands (dots become global collectives under GSPMD).
+
+Operators are unified under :mod:`repro.core.linop`: formats, preconditioners,
+and solver factories are all LinOps composing through one ``apply``.
+:class:`LinearOperator` survives only as a deprecated back-compat shim over
+:func:`repro.core.linop.as_linop`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro import sparse
-from repro.sparse.formats import Coo, Csr, Dense, Ell, Sellp
 from repro.core import registry
+from repro.core.linop import Identity, LinOp, as_linop
+from repro.sparse.formats import Coo, Csr, Dense, Ell, Sellp
 
-MatrixLike = Union[Coo, Csr, Ell, Sellp, Dense, Callable[[jax.Array], jax.Array]]
+MatrixLike = Union[
+    LinOp, Coo, Csr, Ell, Sellp, Dense, Callable[[jax.Array], jax.Array]
+]
 
 __all__ = [
     "LinearOperator",
@@ -31,17 +39,40 @@ __all__ = [
 ]
 
 
-class LinearOperator:
-    """gko::LinOp analogue: anything that can apply() to a vector."""
+class LinearOperator(LinOp):
+    """Deprecated back-compat shim — use the operand directly, or
+    :func:`repro.core.linop.as_linop`.
+
+    Every sparse format, preconditioner, and solver factory is now itself a
+    :class:`~repro.core.linop.LinOp`; wrapping one in ``LinearOperator`` adds
+    nothing.  The class delegates to ``as_linop`` so existing call sites keep
+    the historical behavior (format -> registry-dispatched SpMV, callable ->
+    matrix-free apply).
+    """
 
     def __init__(self, A: MatrixLike, executor=None):
+        warnings.warn(
+            "repro.solvers.common.LinearOperator is deprecated: formats, "
+            "preconditioners and solvers are LinOps — pass them directly "
+            "(or use repro.core.linop.as_linop for bare callables)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         self.A = A
+        self.op = as_linop(A)
         self.executor = executor
 
-    def __call__(self, x: jax.Array) -> jax.Array:
-        if callable(self.A) and not hasattr(self.A, "values"):
-            return self.A(x)
-        return sparse.apply(self.A, x, executor=self.executor)
+    @property
+    def shape(self):
+        return getattr(self.op, "shape", None)
+
+    @property
+    def dtype(self):
+        return getattr(self.op, "dtype", None)
+
+    def _apply(self, x: jax.Array, executor) -> jax.Array:
+        ex = executor if executor is not None else self.executor
+        return self.op.apply(x, executor=ex)
 
 
 @jax.tree_util.register_dataclass
@@ -111,7 +142,9 @@ def _extract_diag_ref(ex, A):
         hit = A.col_idx == rows
         return jnp.sum(jnp.where(hit, A.values, 0.0), axis=1)[: min(A.shape)]
     # Fallback (Sellp): densify — reference semantics are allowed to be slow.
-    return jnp.diagonal(sparse.to_dense(A, executor=ex))
+    from repro.sparse import ops as sparse_ops
+
+    return jnp.diagonal(sparse_ops.to_dense(A, executor=ex))
 
 
 @extract_diag_op.register("xla")
@@ -119,8 +152,8 @@ def _extract_diag_xla(ex, A):
     return _extract_diag_ref(ex, A)
 
 
-class ScalarJacobi:
-    """Scalar Jacobi apply: ``M^{-1} v = inv_diag * v``.
+class ScalarJacobi(LinOp):
+    """Scalar Jacobi LinOp: ``M^{-1} v = inv_diag * v``.
 
     ``inv_diag`` may be held in a reduced storage precision (the adaptive
     knob); the apply upcasts to the vector's dtype, so reduced precision only
@@ -131,10 +164,19 @@ class ScalarJacobi:
         self.inv_diag = inv_diag
 
     @property
+    def shape(self):
+        n = self.inv_diag.shape[0]
+        return (n, n)
+
+    @property
+    def dtype(self):
+        return self.inv_diag.dtype
+
+    @property
     def storage_bytes(self) -> int:
         return int(self.inv_diag.size) * self.inv_diag.dtype.itemsize
 
-    def __call__(self, v: jax.Array) -> jax.Array:
+    def _apply(self, v: jax.Array, executor) -> jax.Array:
         return self.inv_diag.astype(v.dtype) * v
 
 
@@ -193,5 +235,8 @@ def block_jacobi_preconditioner(
     )
 
 
-def identity_preconditioner(v: jax.Array) -> jax.Array:
-    return v
+#: the identity preconditioner — a real LinOp (``storage_bytes == 0``), not a
+#: bare function, so benchmark code reads storage/shape uniformly across every
+#: ``M=``.  Remains callable (``identity_preconditioner(v) -> v``) for all
+#: historical call sites.
+identity_preconditioner = Identity()

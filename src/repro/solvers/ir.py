@@ -1,0 +1,193 @@
+"""Iterative refinement / Richardson iteration — gko::solver::Ir.
+
+The outer loop is the textbook refinement
+
+    r_k = b - A x_k          (outer precision — f64 under ``jax_enable_x64``)
+    d_k = S(r_k)             (inner solver: any LinOp approximating A^{-1})
+    x_{k+1} = x_k + d_k
+
+with everything unified by the LinOp interface: the inner solver ``S`` can be
+a relaxation scalar (plain Richardson via
+:class:`~repro.core.linop.ScaledIdentity`), a preconditioner, or — the
+Ginkgo pattern this module exists for — a *generated Krylov solver over a
+reduced-precision copy of A*.  That is mixed-precision iterative refinement:
+the inner CG streams f32 (or 16-bit) operator data, cutting memory traffic
+roughly in half, while the outer residual is evaluated against the full-
+precision operator, recovering the full-precision solution (the adaptive-
+precision playbook of arXiv:2006.16852 applied to the solver itself).
+
+The inner tolerance is budgeted from the storage dtype's unit roundoff
+(:func:`repro.precond.unit_roundoff` — the same table the adaptive
+block-Jacobi rule uses): solving the correction equation much below
+``sqrt(u_inner)`` buys nothing because the inner operator itself is only
+accurate to ``u_inner``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linop import LinOp, ScaledIdentity, as_linop
+from repro.solvers.common import MatrixLike, SolveResult, Stop
+from repro.solvers.krylov import CgSolver
+from repro.sparse import ops as blas
+
+__all__ = ["ir", "mixed_precision_ir", "IrSolver"]
+
+
+def ir(
+    A: MatrixLike,
+    b: jax.Array,
+    x0: Optional[jax.Array] = None,
+    *,
+    stop: Stop = Stop(),
+    inner: Optional[Union[LinOp, Callable]] = None,
+    inner_dtype=None,
+    relaxation: float = 1.0,
+    executor=None,
+) -> SolveResult:
+    """Iterative-refinement / Richardson outer loop.
+
+    ``inner`` is any LinOp (or callable) approximating ``A^{-1}`` — a
+    preconditioner, a generated solver (:class:`~repro.solvers.krylov.CgSolver`
+    over a low-precision copy of A), anything.  ``inner=None`` degenerates to
+    plain Richardson ``x += relaxation * r``.
+
+    ``inner_dtype`` casts the residual down before the inner apply and the
+    correction back up after it — the precision boundary of mixed-precision
+    IR.  The outer residual, norms, and ``x`` stay in ``b``'s dtype
+    throughout; ``iterations`` counts outer sweeps.
+    """
+    Aop = as_linop(A)
+    x = jnp.zeros_like(b) if x0 is None else x0
+    if inner is None:
+        inner = ScaledIdentity(relaxation, b.shape[0], dtype=b.dtype)
+    ex = executor
+    bnorm = blas.norm2(b, executor=ex)
+    thresh = stop.threshold(bnorm)
+
+    def correction(r):
+        r_in = r.astype(inner_dtype) if inner_dtype is not None else r
+        # thread the outer executor down the inner subtree (bare callables
+        # have no executor to thread)
+        d = inner.apply(r_in, executor=ex) if isinstance(inner, LinOp) else inner(r_in)
+        return d.astype(b.dtype)
+
+    # the residual rides in the loop state: one full-precision apply per
+    # sweep (A.apply(-1.0, x, 1.0, b) — the advanced-apply residual form)
+    def cond(state):
+        x, r, k, rnorm = state
+        return (rnorm > thresh) & (k < stop.max_iters)
+
+    def body(state):
+        x, r, k, _ = state
+        x = x + correction(r)
+        r = Aop.apply(-1.0, x, 1.0, b, executor=ex)
+        return x, r, k + 1, blas.norm2(r, executor=ex)
+
+    r0 = Aop.apply(-1.0, x, 1.0, b, executor=ex)
+    state = (x, r0, jnp.int32(0), blas.norm2(r0, executor=ex))
+    x, r, k, rnorm = jax.lax.while_loop(cond, body, state)
+    return SolveResult(x, k, rnorm, rnorm <= thresh)
+
+
+def mixed_precision_ir(
+    A: MatrixLike,
+    b: jax.Array,
+    x0: Optional[jax.Array] = None,
+    *,
+    stop: Stop = Stop(),
+    inner_dtype=jnp.float32,
+    inner_solver: type = CgSolver,
+    inner_stop: Optional[Stop] = None,
+    inner_opts: Optional[dict] = None,
+    executor=None,
+) -> SolveResult:
+    """Mixed-precision IR: a reduced-precision inner Krylov solve under a
+    full-precision outer residual.
+
+    The inner operator is ``A.astype(inner_dtype)`` (structure shared, values
+    cast — :meth:`repro.sparse.formats.MatrixLinOp.astype`), solved by
+    ``inner_solver`` (default CG) to a tolerance budgeted at
+    ``sqrt(unit_roundoff(inner_dtype))`` — tighter is wasted, the inner
+    operator is only accurate to ``u_inner``.  Under ``jax_enable_x64`` with
+    f64 data this converges to the f64 tolerance while the inner iterations
+    stream half the bytes.
+    """
+    from repro.precond import unit_roundoff
+
+    astype = getattr(A, "astype", None)
+    if astype is None:
+        raise TypeError(
+            f"mixed_precision_ir needs an operator with astype() to build the "
+            f"reduced-precision inner copy; {type(A).__name__} has none — "
+            "pass an explicit inner solver to ir() instead"
+        )
+    A_low = astype(inner_dtype)
+    if inner_stop is None:
+        u_inner = unit_roundoff(inner_dtype)
+        inner_stop = Stop(max_iters=200, reduction_factor=u_inner**0.5)
+    inner = inner_solver(
+        A_low, stop=inner_stop, executor=executor, **(inner_opts or {})
+    )
+    return ir(
+        A,
+        b,
+        x0,
+        stop=stop,
+        inner=inner,
+        inner_dtype=inner_dtype,
+        executor=executor,
+    )
+
+
+class IrSolver(LinOp):
+    """Generated IR solver as a LinOp (``inner=`` / ``relaxation=`` forward).
+
+    ``IrSolver(A, inner=CgSolver(A.astype(jnp.float32), ...))`` composes like
+    any other operator — IR itself can precondition, or be refined again.
+    """
+
+    def __init__(
+        self,
+        A: MatrixLike,
+        *,
+        stop: Stop = Stop(),
+        inner=None,
+        inner_dtype=None,
+        relaxation: float = 1.0,
+        executor=None,
+    ):
+        self.A = as_linop(A)
+        self.stop = stop
+        self.inner = inner
+        self.inner_dtype = inner_dtype
+        self.relaxation = relaxation
+        self.executor = executor
+
+    @property
+    def shape(self):
+        return getattr(self.A, "shape", None)
+
+    @property
+    def dtype(self):
+        return getattr(self.A, "dtype", None)
+
+    def solve(self, b: jax.Array, x0=None, *, executor=None) -> SolveResult:
+        ex = executor if executor is not None else self.executor
+        return ir(
+            self.A,
+            b,
+            x0,
+            stop=self.stop,
+            inner=self.inner,
+            inner_dtype=self.inner_dtype,
+            relaxation=self.relaxation,
+            executor=ex,
+        )
+
+    def _apply(self, b: jax.Array, executor) -> jax.Array:
+        return self.solve(b, executor=executor).x

@@ -8,6 +8,12 @@ All solvers:
 * distribute under ``pjit`` by sharding A (rows) and the vectors; the dot
   products lower to global all-reduces under GSPMD.
 
+Each function also has a factory-style LinOp twin (``CgSolver``,
+``GmresSolver``, ...): ``CgSolver(A, stop=...)`` is a
+:class:`~repro.core.linop.LinOp` whose apply *solves*, so a solver can
+precondition another solver — ``cg(A2, b, M=CgSolver(A, ...))`` is
+inner-outer Krylov, Ginkgo's solver-as-preconditioner pattern.
+
 Precision note: the paper evaluates in IEEE754 double precision; on this CPU
 container f64 requires ``jax_enable_x64``.  Solvers are dtype-polymorphic —
 benchmarks run f32 by default and f64 under ``with jax.experimental.enable_x64()``.
@@ -20,8 +26,8 @@ from typing import Callable, Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core.linop import LinOp, as_linop
 from repro.solvers.common import (
-    LinearOperator,
     MatrixLike,
     SolveResult,
     Stop,
@@ -29,26 +35,48 @@ from repro.solvers.common import (
 )
 from repro.sparse import ops as blas
 
-__all__ = ["cg", "fcg", "bicgstab", "cgs", "gmres"]
+__all__ = [
+    "cg",
+    "fcg",
+    "bicgstab",
+    "cgs",
+    "gmres",
+    "CgSolver",
+    "FcgSolver",
+    "BicgstabSolver",
+    "CgsSolver",
+    "GmresSolver",
+]
 
-#: a preconditioner argument: a callable ``v -> M^{-1} v`` or a kind name
-#: (``"jacobi"`` / ``"block_jacobi"`` / ``"parilu"`` / ``"identity"``) that
-#: :func:`repro.precond.make_preconditioner` resolves against ``A`` — the
+#: a preconditioner argument: a LinOp / callable ``v -> M^{-1} v`` or a kind
+#: name (``"jacobi"`` / ``"block_jacobi"`` / ``"parilu"`` / ``"identity"``)
+#: that :func:`repro.precond.make_preconditioner` resolves against ``A`` — the
 #: string path is how the ``adaptive`` storage knob threads through the
 #: solvers: ``cg(A, b, M="block_jacobi", precond_opts={"adaptive": True})``.
-Precond = Union[Callable, str]
+Precond = Union[LinOp, Callable, str]
 
 
-def _setup(A, b, x0, M, executor, precond_opts=None):
-    op = LinearOperator(A, executor=executor)
-    x = jnp.zeros_like(b) if x0 is None else x0
+def _resolve_precond(A, M, executor, precond_opts):
     if isinstance(M, str):
         from repro.precond import make_preconditioner
 
-        M = make_preconditioner(A, M, executor=executor, **(precond_opts or {}))
-    elif precond_opts:
+        return make_preconditioner(A, M, executor=executor, **(precond_opts or {}))
+    if precond_opts:
         raise ValueError("precond_opts is only meaningful when M is a kind name")
-    M = M or identity_preconditioner
+    return M if M is not None else identity_preconditioner
+
+
+def _setup(A, b, x0, M, executor, precond_opts=None):
+    Aop = as_linop(A)
+    op = lambda v: Aop.apply(v, executor=executor)  # noqa: E731
+    x = jnp.zeros_like(b) if x0 is None else x0
+    M = _resolve_precond(A, M, executor, precond_opts)
+    if isinstance(M, LinOp):
+        # thread the solver's executor down the preconditioner subtree too —
+        # A and M must dispatch in the same kernel space (bare callables have
+        # no executor to thread)
+        Mop = M
+        M = lambda v: Mop.apply(v, executor=executor)  # noqa: E731
     return op, x, M
 
 
@@ -339,3 +367,93 @@ def gmres(
     r0 = blas.norm2(b - op(x), executor=ex)
     x, k, rnorm = jax.lax.while_loop(cond, body, (x, jnp.int32(0), r0))
     return SolveResult(x, k, rnorm, rnorm <= thresh)
+
+
+# =============================================================================
+# Factory-style solver LinOps — gko::solver::Cg::Factory ... ::generate(A)
+# =============================================================================
+
+
+class KrylovSolver(LinOp):
+    """A generated solver as a LinOp: ``apply(b)`` *solves* ``A x = b``.
+
+    This is Ginkgo's factory pattern collapsed to one step: a Ginkgo solver
+    factory ``generate(A)``-s a solver object that IS a LinOp, so solvers
+    compose anywhere an operator is expected — as the ``M`` of an outer
+    Krylov method (inner-outer iteration), as the inner solve of iterative
+    refinement (:mod:`repro.solvers.ir`), or inside
+    :class:`~repro.core.linop.Composition` chains.
+
+    String preconditioners resolve at construction (generation time, like
+    Ginkgo's ``generate``), so the host-side setup work never re-runs inside
+    a jitted apply.  ``solve(b)`` returns the full :class:`SolveResult`;
+    ``apply(b)`` returns only ``x`` (the LinOp face).
+    """
+
+    _fn: Callable = None  # bound per subclass
+
+    def __init__(
+        self,
+        A: MatrixLike,
+        *,
+        stop: Stop = Stop(),
+        M: Optional[Precond] = None,
+        precond_opts: Optional[dict] = None,
+        executor=None,
+        **options,
+    ):
+        self.A = as_linop(A)
+        self.stop = stop
+        self.M = _resolve_precond(A, M, executor, precond_opts)
+        self.executor = executor
+        self.options = options
+
+    @property
+    def shape(self):
+        return getattr(self.A, "shape", None)
+
+    @property
+    def dtype(self):
+        return getattr(self.A, "dtype", None)
+
+    def solve(self, b: jax.Array, x0=None, *, executor=None) -> SolveResult:
+        ex = executor if executor is not None else self.executor
+        return type(self)._fn(
+            self.A, b, x0, stop=self.stop, M=self.M, executor=ex, **self.options
+        )
+
+    def _apply(self, b: jax.Array, executor) -> jax.Array:
+        return self.solve(b, executor=executor).x
+
+
+class CgSolver(KrylovSolver):
+    """Generated CG solver (SPD) as a LinOp."""
+
+    _fn = staticmethod(cg)
+
+
+class FcgSolver(KrylovSolver):
+    """Generated flexible-CG solver as a LinOp."""
+
+    _fn = staticmethod(fcg)
+
+
+class BicgstabSolver(KrylovSolver):
+    """Generated BiCGSTAB solver as a LinOp."""
+
+    _fn = staticmethod(bicgstab)
+
+
+class CgsSolver(KrylovSolver):
+    """Generated CGS solver as a LinOp."""
+
+    _fn = staticmethod(cgs)
+
+
+class GmresSolver(KrylovSolver):
+    """Generated GMRES(m) solver as a LinOp (``restart=`` forwards)."""
+
+    _fn = staticmethod(gmres)
+
+    def __init__(self, A, *, restart: int = 30, **kw):
+        super().__init__(A, restart=restart, **kw)

@@ -29,9 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.linop import LinOp
 from repro.sparse.formats import Csr
 
-__all__ = ["parilu_setup", "parilu_factorize", "parilu_preconditioner"]
+__all__ = ["ParILU", "parilu_setup", "parilu_factorize", "parilu_preconditioner"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,19 +197,51 @@ def _jacobi_upper_solve(st, u_vals, b, sweeps, dtype):
     return jax.lax.fori_loop(0, sweeps, body, b / safe)
 
 
+class ParILU(LinOp):
+    """Generated ParILU preconditioner as a LinOp:
+    ``M^-1 v ~= U^-1 (I + L)^-1 v`` via Jacobi triangular sweeps.
+
+    ``storage_bytes`` reports the factor-value storage (L strict-lower +
+    U upper entries) — the footprint the preconditioner owns beyond A.
+    """
+
+    def __init__(self, structure: ParILUStructure, l_vals, u_vals, solve_sweeps: int, dtype):
+        self.structure = structure
+        self.l_vals = l_vals
+        self.u_vals = u_vals
+        self.solve_sweeps = solve_sweeps
+        self._dtype = dtype
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.structure.n, self.structure.n)
+
+    @property
+    def dtype(self):
+        return self._dtype
+
+    @property
+    def storage_bytes(self) -> int:
+        return sum(
+            int(v.size) * v.dtype.itemsize for v in (self.l_vals, self.u_vals)
+        )
+
+    def _apply(self, v: jax.Array, executor) -> jax.Array:
+        y = _jacobi_lower_solve(
+            self.structure, self.l_vals, v, self.solve_sweeps, self._dtype
+        )
+        return _jacobi_upper_solve(
+            self.structure, self.u_vals, y, self.solve_sweeps, self._dtype
+        )
+
+
 def parilu_preconditioner(
     A: Csr,
     *,
     factor_sweeps: int = 5,
     solve_sweeps: int = 8,
     structure: ParILUStructure = None,
-) -> Callable:
+) -> ParILU:
     """M^-1 v  ~=  U^-1 (I + L)^-1 v with iterative sweeps throughout."""
     l_vals, u_vals, st = parilu_factorize(A, structure, sweeps=factor_sweeps)
-    dtype = A.values.dtype
-
-    def apply_m(v: jax.Array) -> jax.Array:
-        y = _jacobi_lower_solve(st, l_vals, v, solve_sweeps, dtype)
-        return _jacobi_upper_solve(st, u_vals, y, solve_sweeps, dtype)
-
-    return apply_m
+    return ParILU(st, l_vals, u_vals, solve_sweeps, A.values.dtype)

@@ -6,9 +6,11 @@ from repro.sparse.formats import (
     Dense,
     Ell,
     Sellp,
+    convert,
     coo_from_dense,
     csr_from_arrays,
     csr_from_dense,
+    csr_host_arrays,
     ell_from_csr_host,
     ell_from_dense,
     sellp_from_csr_host,
@@ -22,6 +24,8 @@ __all__ = [
     "Dense",
     "Ell",
     "Sellp",
+    "convert",
+    "csr_host_arrays",
     "coo_from_dense",
     "csr_from_dense",
     "csr_from_arrays",

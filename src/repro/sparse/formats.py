@@ -26,7 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Coo", "Csr", "Ell", "Sellp", "Dense"]
+from repro.core.linop import LinOp
+
+__all__ = ["Coo", "Csr", "Ell", "Sellp", "Dense", "convert", "csr_host_arrays"]
 
 
 def _register(cls, data_fields, meta_fields):
@@ -40,8 +42,38 @@ def _nbytes(*arrays: jax.Array) -> int:
     return sum(int(a.size) * a.dtype.itemsize for a in arrays)
 
 
+class MatrixLinOp(LinOp):
+    """Common LinOp behavior for every sparse/dense format.
+
+    ``apply`` keeps dispatching through the operation registry and the
+    executor's kernel-space chain (:func:`repro.sparse.ops.apply`) — the
+    format classes gaining a LinOp face changes nothing below the dispatch
+    layer.  Formats carry no ``executor`` field (they are sharded pytrees);
+    the executor threads in from the apply call or the ambient context.
+    """
+
+    def _apply(self, b, executor):
+        from repro.sparse import ops
+
+        return ops.apply(self, b, executor=executor)
+
+    def astype(self, dtype) -> "MatrixLinOp":
+        """Same structure, values cast to ``dtype`` (indices untouched).
+
+        The mixed-precision hook: ``A.astype(jnp.float32)`` is the reduced-
+        precision operator the IR inner solve runs against.
+        """
+        return dataclasses.replace(self, values=self.values.astype(dtype))
+
+    def transpose(self):
+        raise NotImplementedError(
+            f"{type(self).__name__} is not transposable (Ginkgo's "
+            "Transposable covers Dense/Coo/Csr; convert first)"
+        )
+
+
 @dataclasses.dataclass(frozen=True)
-class Dense:
+class Dense(MatrixLinOp):
     """Row-major dense matrix (gko::matrix::Dense)."""
 
     values: jax.Array  # (m, n)
@@ -63,12 +95,15 @@ class Dense:
     def memory_bytes(self) -> int:
         return _nbytes(self.values)
 
+    def transpose(self) -> "Dense":
+        return Dense(self.values.T)
+
 
 _register(Dense, ["values"], [])
 
 
 @dataclasses.dataclass(frozen=True)
-class Coo:
+class Coo(MatrixLinOp):
     """Coordinate format; row indices kept sorted (Ginkgo requires sorted COO)."""
 
     row_idx: jax.Array  # (nnz,) int32, sorted
@@ -88,12 +123,25 @@ class Coo:
     def memory_bytes(self) -> int:
         return _nbytes(self.row_idx, self.col_idx, self.values)
 
+    def transpose(self) -> "Coo":
+        """Host-side transpose (setup time): swap indices, restore row order."""
+        r = np.asarray(self.col_idx)
+        c = np.asarray(self.row_idx)
+        v = np.asarray(self.values)
+        order = np.lexsort((c, r))
+        return Coo(
+            row_idx=jnp.asarray(r[order], jnp.int32),
+            col_idx=jnp.asarray(c[order], jnp.int32),
+            values=jnp.asarray(v[order]),
+            shape=(self.shape[1], self.shape[0]),
+        )
+
 
 _register(Coo, ["row_idx", "col_idx", "values"], ["shape"])
 
 
 @dataclasses.dataclass(frozen=True)
-class Csr:
+class Csr(MatrixLinOp):
     """Compressed sparse row."""
 
     indptr: jax.Array  # (m+1,) int32
@@ -113,12 +161,28 @@ class Csr:
     def memory_bytes(self) -> int:
         return _nbytes(self.indptr, self.indices, self.values)
 
+    def transpose(self) -> "Csr":
+        """Host-side transpose (setup time) via the sorted triplet."""
+        indptr, indices, values = csr_host_arrays(self)
+        m = self.shape[0]
+        rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(indptr))
+        tr, tc = indices, rows  # swapped
+        order = np.lexsort((tc, tr))
+        t_indptr = np.zeros(self.shape[1] + 1, np.int64)
+        np.add.at(t_indptr, tr + 1, 1)
+        return Csr(
+            indptr=jnp.asarray(np.cumsum(t_indptr), jnp.int32),
+            indices=jnp.asarray(tc[order], jnp.int32),
+            values=jnp.asarray(values[order]),
+            shape=(self.shape[1], self.shape[0]),
+        )
+
 
 _register(Csr, ["indptr", "indices", "values"], ["shape"])
 
 
 @dataclasses.dataclass(frozen=True)
-class Ell:
+class Ell(MatrixLinOp):
     """ELLPACK: fixed ``max_nnz`` entries per row, zero-padded.
 
     Padding entries have ``col_idx == 0`` and ``value == 0`` (in-bounds gather,
@@ -152,7 +216,7 @@ _register(Ell, ["col_idx", "values"], ["shape"])
 
 
 @dataclasses.dataclass(frozen=True)
-class Sellp:
+class Sellp(MatrixLinOp):
     """SELL-P (sliced ELL with padding) — Ginkgo's GPU throughput format.
 
     Rows are grouped into slices of ``slice_size`` (C).  Each slice stores its
@@ -336,3 +400,132 @@ def sellp_from_dense(a: np.ndarray, slice_size=8, stride_factor=8) -> Sellp:
         slice_size=slice_size,
         stride_factor=stride_factor,
     )
+
+
+# -- host-side conversion between formats (gko ConvertibleTo) ------------------
+
+
+def csr_host_arrays(A) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """``(indptr, indices, values)`` numpy triplet for any format (host-side).
+
+    Setup-time extraction (Ginkgo's ``convert_to`` hub format): explicit
+    stored zeros in the padded formats (ELL / SELL-P padding slots) are
+    dropped — they are storage artifacts, not matrix entries.
+    """
+    if isinstance(A, Csr):
+        return (
+            np.asarray(A.indptr, np.int64),
+            np.asarray(A.indices, np.int64),
+            np.asarray(A.values),
+        )
+    if isinstance(A, Coo):
+        r = np.asarray(A.row_idx)
+        c = np.asarray(A.col_idx)
+        v = np.asarray(A.values)
+        m = A.shape[0]
+        indptr = np.zeros(m + 1, np.int64)
+        np.add.at(indptr, r + 1, 1)
+        return np.cumsum(indptr), c.astype(np.int64), v
+    if isinstance(A, Dense):
+        a = np.asarray(A.values)
+        r, c = np.nonzero(a)
+        m = a.shape[0]
+        indptr = np.zeros(m + 1, np.int64)
+        np.add.at(indptr, r + 1, 1)
+        return np.cumsum(indptr), c.astype(np.int64), a[r, c]
+    if isinstance(A, Ell):
+        cols = np.asarray(A.col_idx)
+        vals = np.asarray(A.values)
+        keep = vals != 0
+        m = A.shape[0]
+        counts = keep.sum(axis=1)
+        indptr = np.zeros(m + 1, np.int64)
+        indptr[1:] = np.cumsum(counts)
+        return indptr, cols[keep].astype(np.int64), vals[keep]
+    if isinstance(A, Sellp):
+        m = A.shape[0]
+        C = A.slice_size
+        slice_sets = np.asarray(A.slice_sets)
+        cols = np.asarray(A.col_idx)
+        vals = np.asarray(A.values)
+        rows_c, rows_v = [[] for _ in range(m)], [[] for _ in range(m)]
+        for s in range(A.num_slices):
+            lo, hi = int(slice_sets[s]), int(slice_sets[s + 1])
+            width = hi - lo
+            bc = cols[lo * C : hi * C].reshape(width, C)
+            bv = vals[lo * C : hi * C].reshape(width, C)
+            for r in range(min(C, m - s * C)):
+                keep = bv[:, r] != 0
+                rows_c[s * C + r].extend(bc[keep, r].tolist())
+                rows_v[s * C + r].extend(bv[keep, r].tolist())
+        counts = np.array([len(rc) for rc in rows_c], np.int64)
+        indptr = np.zeros(m + 1, np.int64)
+        indptr[1:] = np.cumsum(counts)
+        indices = (
+            np.asarray([c for rc in rows_c for c in rc], np.int64)
+            if indptr[-1]
+            else np.zeros(0, np.int64)
+        )
+        values = (
+            np.asarray([v for rv in rows_v for v in rv], vals.dtype)
+            if indptr[-1]
+            else np.zeros(0, vals.dtype)
+        )
+        return indptr, indices, values
+    raise TypeError(f"cannot extract a CSR triplet from {type(A)}")
+
+
+_CONVERT_TARGETS = {
+    "coo": Coo,
+    "csr": Csr,
+    "ell": Ell,
+    "sellp": Sellp,
+    "dense": Dense,
+}
+
+
+def convert(A, target, **kwargs):
+    """Convert any format to another — Ginkgo's ``ConvertibleTo`` surface.
+
+    ``target`` is a format class or name (``"coo"`` / ``"csr"`` / ``"ell"`` /
+    ``"sellp"`` / ``"dense"``); ``kwargs`` forward to the target constructor
+    (``slice_size`` / ``stride_factor`` for SELL-P, ``max_nnz`` for ELL).
+    Conversion routes host-side through the CSR triplet (setup time) and
+    drops explicit stored zeros, matching the from-dense constructors.
+    """
+    if isinstance(target, str):
+        try:
+            target = _CONVERT_TARGETS[target.lower()]
+        except KeyError:
+            raise KeyError(
+                f"unknown format {target!r}; known: {sorted(_CONVERT_TARGETS)}"
+            ) from None
+    if type(A) is target and not kwargs:
+        return A
+    indptr, indices, values = csr_host_arrays(A)
+    m, n = A.shape
+    if target is Csr:
+        return Csr(
+            indptr=jnp.asarray(indptr, jnp.int32),
+            indices=jnp.asarray(indices, jnp.int32),
+            values=jnp.asarray(values),
+            shape=(m, n),
+        )
+    if target is Coo:
+        rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(indptr))
+        return Coo(
+            row_idx=jnp.asarray(rows, jnp.int32),
+            col_idx=jnp.asarray(indices, jnp.int32),
+            values=jnp.asarray(values),
+            shape=(m, n),
+        )
+    if target is Ell:
+        return ell_from_csr_host(indptr, indices, values, (m, n), **kwargs)
+    if target is Sellp:
+        return sellp_from_csr_host(indptr, indices, values, (m, n), **kwargs)
+    if target is Dense:
+        rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(indptr))
+        out = np.zeros((m, n), values.dtype if values.size else np.dtype(A.dtype))
+        np.add.at(out, (rows, indices), values)
+        return Dense(jnp.asarray(out))
+    raise TypeError(f"unknown conversion target {target!r}")

@@ -216,10 +216,23 @@ _FORMAT_OP = {
 
 
 def apply(A, x: jax.Array, *, executor=None) -> jax.Array:
-    """``A.apply(x)``: format-dispatch then executor-dispatch."""
+    """``A.apply(x)``: format-dispatch then executor-dispatch.
+
+    Composed / non-format LinOps (``Sum``, ``Composition``, solvers, ...)
+    delegate to their own ``apply`` — this function stays the single entry
+    point for "apply any operator" while the format fast path below keeps
+    dispatching straight into the kernel registry.
+    """
     try:
         op = _FORMAT_OP[type(A)]
     except KeyError:
+        from repro.core.linop import LinOp
+        from repro.sparse.formats import MatrixLinOp
+
+        # a MatrixLinOp not in the table is an unregistered *format* — its
+        # _apply would bounce right back here, so fail loudly instead
+        if isinstance(A, LinOp) and not isinstance(A, MatrixLinOp):
+            return A.apply(x, executor=executor)
         raise TypeError(f"no spmv registered for format {type(A)}") from None
     m, n = A.shape
     if m == 0 or n == 0:

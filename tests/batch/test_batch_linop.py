@@ -1,0 +1,151 @@
+"""BatchLinOp: batched operator composition feeding the batched solvers."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import batch, solvers
+from repro.core import (
+    PallasInterpretExecutor,
+    ReferenceExecutor,
+    XlaExecutor,
+    use_executor,
+)
+import repro.kernels  # noqa: F401 — populate the pallas kernel space
+
+NB, N = 16, 24
+
+
+def spd_stack(nb=NB, n=N, seed=3):
+    rng = np.random.default_rng(seed)
+    idx = np.arange(n)
+    stack = np.zeros((nb, n, n), np.float32)
+    for b in range(nb):
+        a = stack[b]
+        a[idx, idx] = 3.0 + (b % 4)
+        a[idx[1:], idx[:-1]] = -1.0
+        a[idx[:-1], idx[1:]] = -1.0
+    return stack
+
+
+def test_batch_formats_are_batch_linops():
+    stack = spd_stack()
+    X = np.random.default_rng(0).normal(size=(NB, N)).astype(np.float32)
+    want = np.einsum("bmn,bn->bm", stack, X)
+    for build in (batch.batch_csr_from_dense, batch.batch_ell_from_dense):
+        A = build(stack)
+        assert isinstance(A, batch.BatchLinOp)
+        assert A.num_batch == NB
+        with use_executor(XlaExecutor()):
+            np.testing.assert_allclose(
+                A.apply(jnp.asarray(X)), want, rtol=1e-4, atol=1e-4
+            )
+            # advanced apply, batched
+            got = A.apply(2.0, jnp.asarray(X), -1.0, jnp.asarray(want))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_batch_sum_and_composition():
+    stack = spd_stack()
+    A = batch.batch_ell_from_dense(stack)
+    X = np.random.default_rng(1).normal(size=(NB, N)).astype(np.float32)
+    shifted = batch.BatchSum(A, batch.BatchScaledIdentity(0.5, N))
+    assert shifted.shape == (N, N)
+    assert shifted.num_batch == NB
+    want = np.einsum("bmn,bn->bm", stack, X) + 0.5 * X
+    with use_executor(XlaExecutor()):
+        np.testing.assert_allclose(
+            shifted(jnp.asarray(X)), want, rtol=1e-4, atol=1e-4
+        )
+        comp = batch.BatchComposition(A, A)
+        want2 = np.einsum("bmn,bn->bm", stack, np.einsum("bmn,bn->bm", stack, X))
+        np.testing.assert_allclose(
+            comp(jnp.asarray(X)), want2, rtol=1e-3, atol=1e-3
+        )
+
+
+@pytest.mark.parametrize(
+    "exec_cls", [ReferenceExecutor, XlaExecutor, PallasInterpretExecutor]
+)
+def test_batch_solvers_accept_composed_operators(exec_cls):
+    """batch_cg over Sum(A, sigma*I) — shifted batch without touching A."""
+    stack = spd_stack()
+    sigma = 1.0
+    A = batch.batch_ell_from_dense(stack)
+    shifted = batch.BatchSum(A, batch.BatchScaledIdentity(sigma, N))
+    rng = np.random.default_rng(2)
+    xstar = rng.normal(size=(NB, N)).astype(np.float32)
+    dense_shifted = stack + sigma * np.eye(N, dtype=np.float32)
+    B = np.einsum("bmn,bn->bm", dense_shifted, xstar)
+    with use_executor(exec_cls()):
+        res = batch.batch_cg(
+            shifted, jnp.asarray(B),
+            stop=solvers.Stop(max_iters=200, reduction_factor=1e-5),
+        )
+    assert bool(np.asarray(res.converged).all()), exec_cls.__name__
+    np.testing.assert_allclose(np.asarray(res.x), xstar, atol=2e-3)
+
+
+def test_batch_identity_preconditioner_is_linop():
+    assert isinstance(batch.batch_identity_preconditioner, batch.BatchIdentity)
+    assert batch.batch_identity_preconditioner.storage_bytes == 0
+    V = jnp.ones((3, 4), jnp.float32)
+    np.testing.assert_array_equal(batch.batch_identity_preconditioner(V), V)
+
+
+def test_batch_matrix_free_op():
+    stack = spd_stack()
+    dense = jnp.asarray(stack)
+    A = batch.BatchMatrixFreeOp(
+        lambda X: jnp.einsum("bmn,bn->bm", dense, X),
+        shape=(N, N), num_batch=NB,
+    )
+    assert A.num_batch == NB
+    rng = np.random.default_rng(4)
+    xstar = rng.normal(size=(NB, N)).astype(np.float32)
+    B = np.einsum("bmn,bn->bm", stack, xstar)
+    with use_executor(XlaExecutor()):
+        res = batch.batch_cg(
+            A, jnp.asarray(B),
+            stop=solvers.Stop(max_iters=200, reduction_factor=1e-5),
+        )
+    assert bool(np.asarray(res.converged).all())
+    np.testing.assert_allclose(np.asarray(res.x), xstar, atol=2e-3)
+
+
+def test_batch_operator_sugar_stays_batched():
+    """A1 + A2 / A1 @ A2 over batched operands build Batch* combinators."""
+    stack = spd_stack()
+    A1 = batch.batch_csr_from_dense(stack)
+    A2 = batch.batch_csr_from_dense(stack * 2.0)
+    s = A1 + A2
+    assert isinstance(s, batch.BatchSum)
+    assert s.num_batch == NB
+    c = A1 @ A2
+    assert isinstance(c, batch.BatchComposition)
+    X = np.random.default_rng(5).normal(size=(NB, N)).astype(np.float32)
+    with use_executor(XlaExecutor()):
+        np.testing.assert_allclose(
+            batch.apply_batch(s, jnp.asarray(X)),
+            3.0 * np.einsum("bmn,bn->bm", stack, X), rtol=1e-4, atol=1e-4,
+        )
+
+
+def test_unregistered_batch_format_subclass_raises():
+    """A BatchMatrixLinOp subclass missing from the dispatch table must get
+    the loud TypeError, not bounce into infinite recursion."""
+
+    class MyBatchCsr(batch.BatchCsr):
+        pass
+
+    A = batch.batch_csr_from_dense(spd_stack())
+    weird = MyBatchCsr(A.indptr, A.indices, A.values, A.shape)
+    with pytest.raises(TypeError, match="no batched spmv registered"):
+        batch.apply_batch(weird, jnp.ones((NB, N), jnp.float32))
+
+
+def test_batch_astype():
+    A = batch.batch_csr_from_dense(spd_stack())
+    A16 = A.astype(jnp.bfloat16)
+    assert A16.dtype == jnp.bfloat16
+    assert A16.indices is A.indices  # structure shared, values cast

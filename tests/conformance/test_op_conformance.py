@@ -5,8 +5,12 @@ The HIP-porting testimonial (arXiv:2006.14290) names systematic
 every combination must agree with the reference space before a new target can
 claim support.  This suite is that matrix for this repo:
 
-    (Coo / Csr / Ell / Sellp / Dense) x (spmv, to_dense, BLAS-1)
+    (Coo / Csr / Ell / Sellp / Dense) x (spmv, to_dense, BLAS-1, linop_apply)
         x (reference, xla, pallas-interpret)
+
+where the ``linop_apply`` axis applies *composed* operators (``Sum``,
+``Composition``, ``ScaledIdentity`` over each format) — the combinator layer
+must be semantics-free in every kernel space.
 
 over hypothesis-generated sparsity patterns (the deterministic ``_hyp_compat``
 shim when hypothesis is absent).  Assertions are two-tier:
@@ -28,7 +32,7 @@ import pytest
 from _hyp_compat import given, settings, st
 
 from repro import sparse
-from repro.core import make_executor, registry
+from repro.core import Composition, ScaledIdentity, Sum, make_executor, registry
 import repro.kernels  # noqa: F401 — populate the pallas kernel space
 
 _KINDS = ("reference", "xla", "pallas_interpret")
@@ -158,6 +162,52 @@ def test_block_jacobi_apply_conformance(exec_kind, n, bs, seed):
     ref = op(inv, vp, executor=_reference())
     got = op(inv, vp, executor=make_executor(exec_kind))
     _assert_conforms(got, ref, what=f"block_jacobi_apply on {exec_kind}", atol=1e-4)
+
+
+#: the linop_apply axis: composed-operator constructions over a square format
+#: operand.  Each entry builds an operator from (A, n) and the dense ``a`` it
+#: was built from, returning (linop, expected_dense).
+_LINOP_CASES = {
+    "sum_shift": lambda A, a, n: (
+        Sum(A, ScaledIdentity(np.float32(0.75), n)),
+        a + 0.75 * np.eye(n, dtype=np.float32),
+    ),
+    "composition": lambda A, a, n: (Composition(A, A), a @ a),
+    "scaled_composition": lambda A, a, n: (
+        Composition(ScaledIdentity(np.float32(-2.0), n), A),
+        -2.0 * a,
+    ),
+    "sum_of_compositions": lambda A, a, n: (
+        Sum(Composition(A, A), A, ScaledIdentity(np.float32(0.5), n)),
+        a @ a + a + 0.5 * np.eye(n, dtype=np.float32),
+    ),
+}
+
+
+@pytest.mark.parametrize("exec_kind", EXEC_KINDS)
+@pytest.mark.parametrize("case", sorted(_LINOP_CASES))
+@pytest.mark.parametrize("fmt", FORMATS)
+@settings(max_examples=4)
+@given(
+    n=st.integers(2, 32),
+    density=st.floats(0.05, 0.8),
+    seed=st.integers(0, 10_000),
+)
+def test_linop_apply_conformance(fmt, case, exec_kind, n, density, seed):
+    """Composed operators (Sum / Composition / ScaledIdentity over each
+    format) must match the reference executor — the combinator layer may not
+    change semantics in any kernel space."""
+    a = _pattern(n, n, density, seed)
+    x = np.random.default_rng(seed + 2).normal(size=(n,)).astype(np.float32)
+    A = BUILD[fmt](a)
+    op, want = _LINOP_CASES[case](A, a, n)
+    ref = op.apply(jnp.asarray(x), executor=_reference())
+    got = op.apply(jnp.asarray(x), executor=make_executor(exec_kind))
+    _assert_conforms(got, ref, what=f"linop[{case}/{fmt}] on {exec_kind}", atol=1e-3)
+    # and the reference evaluation must match the dense math
+    np.testing.assert_allclose(
+        np.asarray(ref, np.float64), want @ x, atol=1e-2, rtol=1e-3
+    )
 
 
 @pytest.mark.parametrize("exec_kind", EXEC_KINDS)

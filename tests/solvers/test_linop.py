@@ -1,0 +1,370 @@
+"""The LinOp hierarchy: combinators, compat shims, solver-as-preconditioner.
+
+Covers the unification contract: formats, preconditioners, and generated
+solvers are all LinOps composing through one ``apply``; the historical
+conventions (``LinearOperator`` wrappers, plain-callable ``M=``) keep working
+through the deprecation shim.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import solvers, sparse
+from repro.core import (
+    Composition,
+    Identity,
+    LinOp,
+    MatrixFreeOp,
+    PallasInterpretExecutor,
+    ReferenceExecutor,
+    ScaledIdentity,
+    Sum,
+    Transpose,
+    XlaExecutor,
+    as_linop,
+    use_executor,
+)
+
+
+def spd_system(n=96, rng=None):
+    rng = rng or np.random.default_rng(3)
+    a = np.zeros((n, n), np.float32)
+    for i in range(n):
+        a[i, i] = 4.0
+        if i > 0:
+            a[i, i - 1] = a[i - 1, i] = -1.0
+        if i > 2:
+            a[i, i - 3] = a[i - 3, i] = -0.5
+    x = rng.normal(size=n).astype(np.float32)
+    return a, x, (a @ x).astype(np.float32)
+
+
+STOP = solvers.Stop(max_iters=500, reduction_factor=1e-6)
+
+
+# =============================================================================
+# The LinOp interface on every layer
+# =============================================================================
+
+
+def test_formats_are_linops():
+    a, _, _ = spd_system(32)
+    for build in (sparse.coo_from_dense, sparse.csr_from_dense,
+                  sparse.ell_from_dense, sparse.sellp_from_dense):
+        A = build(a)
+        assert isinstance(A, LinOp)
+        v = jnp.ones(32, jnp.float32)
+        with use_executor(XlaExecutor()):
+            np.testing.assert_allclose(A.apply(v), a @ np.ones(32), rtol=1e-4)
+            # __call__ aliases the simple apply (the preconditioner face)
+            np.testing.assert_allclose(A(v), A.apply(v), rtol=1e-6)
+    assert isinstance(sparse.Dense(jnp.asarray(a)), LinOp)
+
+
+def test_advanced_apply():
+    """x = alpha * A @ b + beta * x — Ginkgo's four-argument apply."""
+    a, _, _ = spd_system(24)
+    A = sparse.csr_from_dense(a)
+    rng = np.random.default_rng(0)
+    b = rng.normal(size=24).astype(np.float32)
+    x = rng.normal(size=24).astype(np.float32)
+    with use_executor(XlaExecutor()):
+        got = A.apply(2.0, jnp.asarray(b), -0.5, jnp.asarray(x))
+    np.testing.assert_allclose(got, 2.0 * (a @ b) - 0.5 * x, rtol=1e-4, atol=1e-4)
+
+
+def test_preconditioners_are_linops_with_storage():
+    a, _, _ = spd_system(32)
+    A = sparse.csr_from_dense(a)
+    with use_executor(XlaExecutor()):
+        variants = [
+            solvers.identity_preconditioner,
+            solvers.jacobi_preconditioner(A),
+            solvers.block_jacobi_preconditioner(A, block_size=4),
+            solvers.parilu_preconditioner(A),
+        ]
+    for M in variants:
+        assert isinstance(M, LinOp), type(M)
+        assert isinstance(M.storage_bytes, int)
+    assert solvers.identity_preconditioner.storage_bytes == 0
+    assert variants[1].storage_bytes > 0  # jacobi stores the inverse diagonal
+    assert variants[3].storage_bytes > 0  # parilu stores the factors
+
+
+def test_identity_preconditioner_is_identity_linop():
+    assert isinstance(solvers.identity_preconditioner, Identity)
+    v = jnp.arange(5, dtype=jnp.float32)
+    np.testing.assert_array_equal(solvers.identity_preconditioner(v), v)
+
+
+# =============================================================================
+# Combinators
+# =============================================================================
+
+
+def test_shifted_system_solve():
+    """A + sigma*I as Sum(A, ScaledIdentity) — no storage mutation of A."""
+    a, _, _ = spd_system(64)
+    sigma = 1.5
+    A = sparse.csr_from_dense(a)
+    shifted = Sum(A, ScaledIdentity(sigma, 64))
+    assert shifted.shape == (64, 64)
+    rng = np.random.default_rng(1)
+    xstar = rng.normal(size=64).astype(np.float32)
+    b = ((a + sigma * np.eye(64)) @ xstar).astype(np.float32)
+    with use_executor(XlaExecutor()):
+        res = solvers.cg(shifted, jnp.asarray(b), stop=STOP)
+    assert bool(res.converged)
+    np.testing.assert_allclose(res.x, xstar, atol=1e-3)
+
+
+def test_composition_and_transpose():
+    a, _, _ = spd_system(24)
+    rng = np.random.default_rng(2)
+    g = np.triu(rng.normal(size=(24, 24)).astype(np.float32))
+    A = sparse.csr_from_dense(g)
+    v = rng.normal(size=24).astype(np.float32)
+    with use_executor(XlaExecutor()):
+        np.testing.assert_allclose(
+            Composition(A, A)(jnp.asarray(v)), g @ (g @ v), rtol=1e-3, atol=1e-3
+        )
+        np.testing.assert_allclose(
+            Transpose(A)(jnp.asarray(v)), g.T @ v, rtol=1e-4, atol=1e-4
+        )
+        # A^T A via combinators — the normal-equations operator
+        AtA = Composition(Transpose(A), A)
+        np.testing.assert_allclose(
+            AtA(jnp.asarray(v)), g.T @ (g @ v), rtol=1e-3, atol=1e-3
+        )
+    assert AtA.shape == (24, 24)
+
+
+def test_transpose_distributes_over_combinators():
+    rng = np.random.default_rng(3)
+    g = rng.normal(size=(8, 8)).astype(np.float32)
+    h = rng.normal(size=(8, 8)).astype(np.float32)
+    A, B = sparse.csr_from_dense(g), sparse.csr_from_dense(h)
+    v = rng.normal(size=8).astype(np.float32)
+    with use_executor(XlaExecutor()):
+        np.testing.assert_allclose(
+            Transpose(Composition(A, B))(jnp.asarray(v)),
+            (g @ h).T @ v, rtol=1e-3, atol=1e-3,
+        )
+        np.testing.assert_allclose(
+            Transpose(Sum(A, B))(jnp.asarray(v)),
+            (g + h).T @ v, rtol=1e-3, atol=1e-3,
+        )
+
+
+def test_transpose_unsupported_format_raises():
+    a, _, _ = spd_system(16)
+    with pytest.raises(NotImplementedError, match="not transposable"):
+        Transpose(sparse.ell_from_dense(a))
+    with pytest.raises(NotImplementedError, match="not transposable"):
+        Transpose(MatrixFreeOp(lambda v: v, shape=(16, 16)))
+
+
+def test_matrix_free_op():
+    """A matrix-free operator (here: the tridiagonal stencil as pure jnp)
+    drives CG without any stored matrix."""
+    n = 48
+    a, xstar, b = spd_system(n)
+
+    def stencil(v):
+        out = 4.0 * v
+        out = out.at[1:].add(-1.0 * v[:-1]).at[:-1].add(-1.0 * v[1:])
+        out = out.at[3:].add(-0.5 * v[:-3]).at[:-3].add(-0.5 * v[3:])
+        return out
+
+    A = MatrixFreeOp(stencil, shape=(n, n), dtype=jnp.float32)
+    assert A.shape == (n, n)
+    with use_executor(XlaExecutor()):
+        res = solvers.cg(A, jnp.asarray(b), stop=STOP)
+    assert bool(res.converged)
+    np.testing.assert_allclose(res.x, xstar, atol=1e-3)
+
+
+def test_combinator_dtype_none_when_operands_declare_none():
+    """Compositions of dtype-less matrix-free operators report dtype None
+    (the 'unknown' convention) instead of raising."""
+    f = MatrixFreeOp(lambda v: v, shape=(4, 4))
+    assert Composition(f, f).dtype is None
+    assert Sum(f, f).dtype is None
+    assert solvers.CgSolver(Composition(f, f)).dtype is None
+
+
+def test_combinator_shape_mismatch_raises():
+    a, _, _ = spd_system(8)
+    A = sparse.csr_from_dense(a)
+    B = sparse.csr_from_dense(np.ones((4, 8), np.float32))
+    with pytest.raises(ValueError, match="shape mismatch"):
+        Composition(A, B)  # (8,8) cannot follow (4,8)
+    with pytest.raises(ValueError, match="mismatched shapes"):
+        Sum(A, B)
+
+
+# =============================================================================
+# Solver factories: a generated solver IS a LinOp
+# =============================================================================
+
+
+def test_solver_factory_solves_via_apply():
+    a, xstar, b = spd_system(48)
+    A = sparse.csr_from_dense(a)
+    with use_executor(XlaExecutor()):
+        S = solvers.CgSolver(A, stop=STOP)
+        x = S.apply(jnp.asarray(b))
+        np.testing.assert_allclose(x, xstar, atol=1e-3)
+        res = S.solve(jnp.asarray(b))  # the full-result face
+        assert bool(res.converged)
+    assert S.shape == (48, 48)
+
+
+@pytest.mark.parametrize(
+    "exec_cls", [ReferenceExecutor, XlaExecutor, PallasInterpretExecutor]
+)
+def test_solver_as_preconditioner_parity(exec_cls):
+    """cg(A, b, M=GmresSolver(A, ...)) — inner-outer Krylov — must converge
+    to the same answer in all three kernel spaces."""
+    a, xstar, b = spd_system(48)
+    A = sparse.csr_from_dense(a)
+    with use_executor(exec_cls()):
+        inner = solvers.GmresSolver(
+            A, restart=8, stop=solvers.Stop(max_iters=8, reduction_factor=1e-2)
+        )
+        res = solvers.cg(A, jnp.asarray(b), M=inner,
+                         stop=solvers.Stop(max_iters=100, reduction_factor=1e-6))
+    assert bool(res.converged), exec_cls.__name__
+    np.testing.assert_allclose(res.x, xstar, atol=1e-3)
+
+
+def test_inner_outer_krylov_reduces_outer_iterations():
+    a, xstar, b = spd_system(96)
+    A = sparse.csr_from_dense(a)
+    with use_executor(XlaExecutor()):
+        plain = solvers.fcg(A, jnp.asarray(b), stop=STOP)
+        inner = solvers.CgSolver(
+            A, stop=solvers.Stop(max_iters=10, reduction_factor=1e-2)
+        )
+        nested = solvers.fcg(A, jnp.asarray(b), M=inner, stop=STOP)
+    assert bool(nested.converged)
+    assert int(nested.iterations) < int(plain.iterations)
+    np.testing.assert_allclose(nested.x, xstar, atol=1e-3)
+
+
+def test_solver_factory_resolves_string_preconditioner():
+    a, xstar, b = spd_system(48)
+    A = sparse.csr_from_dense(a)
+    with use_executor(XlaExecutor()):
+        S = solvers.CgSolver(A, stop=STOP, M="block_jacobi",
+                             precond_opts={"block_size": 4})
+        assert isinstance(S.M, LinOp)  # resolved at generation time
+        np.testing.assert_allclose(S(jnp.asarray(b)), xstar, atol=1e-3)
+
+
+# =============================================================================
+# Back-compat shims (deprecated but working)
+# =============================================================================
+
+
+def test_linear_operator_shim_deprecated_but_working():
+    a, xstar, b = spd_system(48)
+    A = sparse.csr_from_dense(a)
+    with pytest.warns(DeprecationWarning, match="LinearOperator is deprecated"):
+        op = solvers.LinearOperator(A)
+    v = jnp.asarray(np.random.default_rng(0).normal(size=48).astype(np.float32))
+    with use_executor(XlaExecutor()):
+        np.testing.assert_allclose(op(v), a @ np.asarray(v), rtol=1e-4, atol=1e-4)
+        # and it still works as the A of a solve (it is itself a LinOp now)
+        res = solvers.cg(op, jnp.asarray(b), stop=STOP)
+    assert bool(res.converged)
+    np.testing.assert_allclose(res.x, xstar, atol=1e-3)
+
+
+def test_linear_operator_shim_wraps_callable():
+    a, xstar, b = spd_system(32)
+    dense = jnp.asarray(a)
+    with pytest.warns(DeprecationWarning):
+        op = solvers.LinearOperator(lambda v: dense @ v)
+    with use_executor(XlaExecutor()):
+        res = solvers.cg(op, jnp.asarray(b), stop=STOP)
+    assert bool(res.converged)
+
+
+def test_plain_callable_preconditioner_still_works():
+    """The historical convention: M is a bare function v -> M^{-1} v."""
+    a, xstar, b = spd_system(64)
+    A = sparse.csr_from_dense(a)
+    inv_diag = jnp.asarray(1.0 / np.diag(a).astype(np.float32))
+    with use_executor(XlaExecutor()):
+        res = solvers.cg(A, jnp.asarray(b), M=lambda v: inv_diag * v, stop=STOP)
+    assert bool(res.converged)
+    np.testing.assert_allclose(res.x, xstar, atol=1e-3)
+
+
+def test_solver_threads_executor_into_preconditioner():
+    """executor= passed to a solver governs the preconditioner subtree too —
+    A and M must dispatch in the same kernel space."""
+    a, _, b = spd_system(16)
+    A = sparse.csr_from_dense(a)
+    seen = []
+
+    class Probe(LinOp):
+        def _apply(self, v, executor):
+            seen.append(executor)
+            return v
+
+    ex = XlaExecutor()
+    solvers.cg(A, jnp.asarray(b), M=Probe(),
+               stop=solvers.Stop(max_iters=2, reduction_factor=1e-10),
+               executor=ex)
+    assert seen and all(e is ex for e in seen), seen
+
+
+def test_as_linop_coercion():
+    a, _, _ = spd_system(16)
+    A = sparse.csr_from_dense(a)
+    assert as_linop(A) is A  # LinOps pass through untouched
+    wrapped = as_linop(lambda v: v * 2.0)
+    assert isinstance(wrapped, MatrixFreeOp)
+    with pytest.raises(TypeError, match="cannot interpret"):
+        as_linop(42)
+
+
+def test_sparse_apply_accepts_composed_linops():
+    """sparse.apply stays the one entry point: non-format LinOps delegate."""
+    a, _, _ = spd_system(16)
+    A = sparse.csr_from_dense(a)
+    v = jnp.ones(16, jnp.float32)
+    with use_executor(XlaExecutor()):
+        got = sparse.apply(Sum(A, ScaledIdentity(2.0, 16)), v)
+    np.testing.assert_allclose(got, a @ np.ones(16) + 2.0, rtol=1e-4)
+
+
+def test_unregistered_format_subclass_raises():
+    """A MatrixLinOp subclass missing from the dispatch table must get the
+    loud TypeError, not bounce into infinite recursion."""
+
+    class MyCsr(sparse.Csr):
+        pass
+
+    a, _, _ = spd_system(8)
+    A = sparse.csr_from_dense(a)
+    weird = MyCsr(A.indptr, A.indices, A.values, A.shape)
+    with pytest.raises(TypeError, match="no spmv registered"):
+        sparse.apply(weird, jnp.ones(8, jnp.float32))
+
+
+def test_operator_sugar():
+    """A + B and A @ B build Sum / Composition."""
+    a, _, _ = spd_system(8)
+    A = sparse.csr_from_dense(a)
+    s = A + ScaledIdentity(1.0, 8)
+    assert isinstance(s, Sum)
+    c = A @ A
+    assert isinstance(c, Composition)
+    v = jnp.ones(8, jnp.float32)
+    with use_executor(XlaExecutor()):
+        np.testing.assert_allclose(s(v), a @ np.ones(8) + 1.0, rtol=1e-4)

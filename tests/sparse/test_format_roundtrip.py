@@ -1,0 +1,141 @@
+"""Format-conversion round-trips: Csr <-> Ell <-> Sellp <-> Coo <-> Dense.
+
+Ginkgo's ``ConvertibleTo`` contract: converting between any two formats must
+preserve the matrix — the stored layout changes, the operator does not.  The
+suite walks conversion chains over hypothesis-generated patterns (via the
+``_hyp_compat`` shim when hypothesis is absent) and checks, at every hop,
+
+* ``to_dense`` reproduces the construction input, and
+* ``apply`` parity: the converted operator computes the same SpMV,
+
+including the degenerate patterns that historically break padded formats:
+empty rows, single-column matrices, and the all-zero matrix.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro import sparse
+from repro.core import ReferenceExecutor, XlaExecutor, use_executor
+
+FORMATS = ("csr", "ell", "sellp", "coo", "dense")
+
+BUILD = {
+    "coo": sparse.coo_from_dense,
+    "csr": sparse.csr_from_dense,
+    "ell": sparse.ell_from_dense,
+    "sellp": sparse.sellp_from_dense,
+    "dense": lambda a: sparse.Dense(jnp.asarray(a)),
+}
+
+#: full cycle touching every format, plus the reverse orientation
+CHAINS = (
+    ("csr", "ell", "sellp", "coo", "dense", "csr"),
+    ("dense", "coo", "sellp", "ell", "csr", "dense"),
+)
+
+
+def _pattern(m, n, density, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, n)).astype(np.float32)
+    return np.where(rng.random((m, n)) < density, a, 0.0)
+
+
+def _check_chain(a, chain, x):
+    """Walk ``chain``, asserting densify + apply parity at every hop."""
+    want = a @ x
+    A = BUILD[chain[0]](a)
+    with use_executor(XlaExecutor()):
+        for hop in chain[1:]:
+            A = sparse.convert(A, hop)
+            assert A.shape == a.shape, f"{hop}: shape drifted to {A.shape}"
+            assert A.dtype == a.dtype, f"{hop}: dtype drifted to {A.dtype}"
+            with use_executor(ReferenceExecutor()):
+                np.testing.assert_allclose(
+                    np.asarray(sparse.to_dense(A)), a, atol=1e-6,
+                    err_msg=f"to_dense after converting to {hop}",
+                )
+            got = sparse.apply(A, jnp.asarray(x))
+            np.testing.assert_allclose(
+                np.asarray(got), want, rtol=1e-3, atol=1e-4,
+                err_msg=f"apply parity after converting to {hop}",
+            )
+
+
+@pytest.mark.parametrize("chain", CHAINS, ids=lambda c: "->".join(c))
+@settings(max_examples=6)
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(1, 40),
+    density=st.floats(0.02, 0.9),
+    seed=st.integers(0, 10_000),
+)
+def test_roundtrip_chain_property(chain, m, n, density, seed):
+    a = _pattern(m, n, density, seed)
+    x = np.random.default_rng(seed + 1).normal(size=(n,)).astype(np.float32)
+    _check_chain(a, chain, x)
+
+
+@settings(max_examples=6)
+@given(
+    src=st.sampled_from(FORMATS),
+    dst=st.sampled_from(FORMATS),
+    seed=st.integers(0, 10_000),
+)
+def test_pairwise_conversion_property(src, dst, seed):
+    """Every ordered (src, dst) pair converts losslessly."""
+    a = _pattern(17, 23, 0.2, seed)
+    x = np.random.default_rng(seed + 1).normal(size=(23,)).astype(np.float32)
+    _check_chain(a, (src, dst, src), x)
+
+
+def test_roundtrip_empty_rows():
+    """Rows with no entries survive every conversion (the ELL/SELL-P padding
+    and the CSR searchsorted row-id path are both easy to get wrong here)."""
+    a = np.zeros((16, 12), np.float32)
+    a[3, 5] = 2.0
+    a[10, 0] = -1.5  # a *real* column-0 entry, the padding look-alike
+    x = np.random.default_rng(0).normal(size=12).astype(np.float32)
+    for chain in CHAINS:
+        _check_chain(a, chain, x)
+
+
+def test_roundtrip_single_column():
+    """n == 1: every stored entry points at column 0, indistinguishable from
+    the padding convention by column alone."""
+    a = np.zeros((9, 1), np.float32)
+    a[[0, 4, 8], 0] = [1.0, -2.0, 3.0]
+    x = np.asarray([0.5], np.float32)
+    for chain in CHAINS:
+        _check_chain(a, chain, x)
+
+
+def test_roundtrip_single_row_and_all_zero():
+    x3 = np.random.default_rng(1).normal(size=3).astype(np.float32)
+    _check_chain(np.asarray([[1.0, 0.0, 2.0]], np.float32), CHAINS[0], x3)
+    # all-zero matrix: nnz == 0 everywhere, padded formats keep min-width rows
+    _check_chain(np.zeros((5, 7), np.float32), CHAINS[0],
+                 np.random.default_rng(2).normal(size=7).astype(np.float32))
+
+
+def test_convert_preserves_sellp_kwargs():
+    a = _pattern(20, 20, 0.3, 5)
+    A = sparse.convert(sparse.csr_from_dense(a), "sellp", slice_size=4,
+                       stride_factor=2)
+    assert A.slice_size == 4 and A.stride_factor == 2
+    with use_executor(ReferenceExecutor()):
+        np.testing.assert_allclose(np.asarray(sparse.to_dense(A)), a, atol=1e-6)
+
+
+def test_convert_same_format_is_identity():
+    a = _pattern(8, 8, 0.4, 6)
+    A = sparse.csr_from_dense(a)
+    assert sparse.convert(A, "csr") is A
+
+
+def test_convert_unknown_target_raises():
+    A = sparse.csr_from_dense(np.eye(3, dtype=np.float32))
+    with pytest.raises(KeyError, match="unknown format"):
+        sparse.convert(A, "hybrid")
