@@ -65,10 +65,30 @@ class LinOp:
     #: executor this operator prefers; ``None`` defers to the caller/ambient.
     executor = None
 
+    #: the distributed apply protocol (gko::experimental::distributed):
+    #: operators whose storage is row-sharded over a mesh axis set this True
+    #: and implement :meth:`local_operator`; the solver layer consults the
+    #: flag to run the whole iteration under ``shard_map`` with per-shard
+    #: kernels and ``psum`` reductions (see :mod:`repro.distributed.solvers`).
+    is_distributed = False
+
     # -- subclass surface ------------------------------------------------------
     def _apply(self, b: jax.Array, executor) -> jax.Array:
         raise NotImplementedError(
             f"{type(self).__name__} does not implement _apply"
+        )
+
+    def local_operator(self, executor=None) -> "LinOp":
+        """Per-shard operator for the distributed apply protocol.
+
+        Called INSIDE a ``shard_map`` body on an operator whose array leaves
+        carry a leading shard axis of size 1; returns the LinOp acting on
+        this shard's padded-local vectors (collectives allowed — halo
+        exchange, ``psum``).  Only meaningful when ``is_distributed``.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} is not a distributed operator "
+            "(is_distributed is False)"
         )
 
     # -- the gko::LinOp::apply interface ---------------------------------------

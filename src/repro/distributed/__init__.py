@@ -1,5 +1,52 @@
-"""repro.distributed — sharding rules + explicit collective algorithms."""
+"""repro.distributed — mesh-sharded operators, vectors and solves.
+
+The gko::experimental::distributed analogue (arXiv:2006.16852): a
+:class:`Partition` of the row space, row-partitioned matrix formats
+(:class:`DistCsr` / :class:`DistEll`) whose SpMV is local-block SpMV plus a
+halo exchange under ``shard_map``, padded sharded vectors
+(:class:`DistVector`) with ``psum`` reductions, shard-local preconditioners,
+and :func:`dist_solve` — which runs the UNCHANGED Krylov solver source per
+shard.  Plus the older layers: logical-axis sharding rules
+(:mod:`~repro.distributed.sharding`) and explicit ring collectives
+(:mod:`~repro.distributed.collective_matmul`).
+"""
 
 from repro.distributed import collective_matmul, sharding
+from repro.distributed.matrix import DistCsr, DistEll, DistLinOp, split_by_rows
+from repro.distributed.partition import Partition
+from repro.distributed.precond import (
+    DistBlockJacobi,
+    DistScalarJacobi,
+    dist_block_jacobi,
+    dist_preconditioner,
+    dist_scalar_jacobi,
+)
+from repro.distributed.solvers import dist_solve
+from repro.distributed.vector import (
+    DistVector,
+    dist_axpy,
+    dist_dot,
+    dist_norm2,
+    dist_scal,
+)
 
-__all__ = ["sharding", "collective_matmul"]
+__all__ = [
+    "sharding",
+    "collective_matmul",
+    "Partition",
+    "DistLinOp",
+    "DistCsr",
+    "DistEll",
+    "DistVector",
+    "DistScalarJacobi",
+    "DistBlockJacobi",
+    "split_by_rows",
+    "dist_preconditioner",
+    "dist_scalar_jacobi",
+    "dist_block_jacobi",
+    "dist_solve",
+    "dist_dot",
+    "dist_norm2",
+    "dist_axpy",
+    "dist_scal",
+]

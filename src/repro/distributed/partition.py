@@ -1,0 +1,163 @@
+"""Row partitions — gko::experimental::distributed::Partition for this repo.
+
+A :class:`Partition` splits the global row range ``[0, n)`` into one
+*contiguous* range per part (device).  It is pure host-side setup metadata —
+a frozen, hashable tuple of offsets — so it can ride along as static pytree
+metadata on every distributed operator and be part of ``jit`` cache keys.
+
+Ginkgo's distributed ``Partition`` supports arbitrary range-to-part maps;
+this repo restricts to contiguous ranges in part order (range ``p`` belongs
+to part ``p``), which is what mesh-axis sharding produces and what keeps the
+padded shard layout (below) a single reshape.
+
+Padded shard layout: every part is padded to ``max_part_size`` (``Lmax``) so
+shards have identical shapes under ``shard_map``.  ``pad_index`` /
+``unpad_index`` are the host-precomputed gather maps between the global
+``(n,)`` vector and the padded ``(P, Lmax)`` shard stack; padding slots are
+filled with zeros and masked out of every cross-shard reduction (see
+:func:`repro.distributed.sharding.zero_shard_padding`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = ["Partition"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """Contiguous row ranges per part: part ``p`` owns ``[offsets[p], offsets[p+1])``."""
+
+    offsets: Tuple[int, ...]  # (P+1,) non-decreasing, offsets[0] == 0
+
+    def __post_init__(self):
+        offs = tuple(int(o) for o in self.offsets)
+        object.__setattr__(self, "offsets", offs)
+        if len(offs) < 2:
+            raise ValueError(f"partition needs at least one part, got {offs}")
+        if offs[0] != 0:
+            raise ValueError(f"partition offsets must start at 0, got {offs}")
+        if any(b < a for a, b in zip(offs, offs[1:])):
+            raise ValueError(f"partition offsets must be non-decreasing: {offs}")
+
+    # -- construction ----------------------------------------------------------
+    @classmethod
+    def uniform(cls, n: int, num_parts: int) -> "Partition":
+        """Balanced contiguous split: the first ``n % num_parts`` parts get one
+        extra row (ragged when ``n % num_parts != 0``)."""
+        if num_parts < 1:
+            raise ValueError(f"num_parts must be >= 1, got {num_parts}")
+        base, rem = divmod(int(n), num_parts)
+        sizes = [base + (1 if p < rem else 0) for p in range(num_parts)]
+        return cls.from_part_sizes(sizes)
+
+    @classmethod
+    def from_part_sizes(cls, sizes: Sequence[int]) -> "Partition":
+        offs = [0]
+        for s in sizes:
+            if s < 0:
+                raise ValueError(f"part sizes must be >= 0, got {tuple(sizes)}")
+            offs.append(offs[-1] + int(s))
+        return cls(tuple(offs))
+
+    @classmethod
+    def from_mesh_axis(cls, mesh, n: int, axis: str = "data") -> "Partition":
+        """Partition ``n`` rows over a mesh axis (one part per axis slot)."""
+        return cls.uniform(n, mesh.shape[axis])
+
+    # -- shape queries ---------------------------------------------------------
+    @property
+    def num_parts(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def global_size(self) -> int:
+        return self.offsets[-1]
+
+    @property
+    def part_sizes(self) -> Tuple[int, ...]:
+        return tuple(b - a for a, b in zip(self.offsets, self.offsets[1:]))
+
+    @property
+    def max_part_size(self) -> int:
+        """``Lmax`` — the padded per-shard length."""
+        return max(self.part_sizes)
+
+    def range_of(self, part: int) -> Tuple[int, int]:
+        return (self.offsets[part], self.offsets[part + 1])
+
+    # -- index maps (host-side numpy) ------------------------------------------
+    def part_of(self, rows) -> np.ndarray:
+        """Owning part of each global row (empty parts own nothing)."""
+        rows = np.asarray(rows)
+        if rows.size and (rows.min() < 0 or rows.max() >= self.global_size):
+            raise IndexError(f"rows out of range [0, {self.global_size})")
+        return (
+            np.searchsorted(self._offsets_np, rows, side="right").astype(np.int64)
+            - 1
+        )
+
+    def to_local(self, rows) -> Tuple[np.ndarray, np.ndarray]:
+        """Global rows -> (part, local index within the part)."""
+        p = self.part_of(rows)
+        return p, np.asarray(rows) - self._offsets_np[p]
+
+    def to_global(self, part, local) -> np.ndarray:
+        """(part, local index) -> global row."""
+        part = np.asarray(part, np.int64)
+        local = np.asarray(local, np.int64)
+        sizes = np.asarray(self.part_sizes, np.int64)
+        if (local < 0).any() or (local >= sizes[part]).any():
+            raise IndexError("local index out of its part's range")
+        return self._offsets_np[part] + local
+
+    def padded_index(self, rows) -> np.ndarray:
+        """Global rows -> flat index into the padded ``(P*Lmax,)`` layout.
+
+        This is the coordinate system halo maps gather from after an
+        ``all_gather`` of the padded shards.
+        """
+        p, l = self.to_local(rows)
+        return p * self.max_part_size + l
+
+    @cached_property
+    def _offsets_np(self) -> np.ndarray:
+        return np.asarray(self.offsets, np.int64)
+
+    @cached_property
+    def pad_mask(self) -> np.ndarray:
+        """(P, Lmax) bool — True on real slots, False on padding."""
+        from repro.distributed.sharding import shard_pad_mask
+
+        return shard_pad_mask(self.part_sizes, self.max_part_size)
+
+    @cached_property
+    def _pad_gather(self) -> np.ndarray:
+        """(P, Lmax) int — global row per slot; padding -> n (zero sentinel)."""
+        n, L = self.global_size, self.max_part_size
+        idx = self._offsets_np[:-1, None] + np.arange(L, dtype=np.int64)[None, :]
+        return np.where(self.pad_mask, idx, n)
+
+    @cached_property
+    def _unpad_gather(self) -> np.ndarray:
+        """(n,) int — padded flat slot of each global row."""
+        return self.padded_index(np.arange(self.global_size, dtype=np.int64))
+
+    # -- padded shard stack <-> global vector (device, jittable) ---------------
+    def pad(self, x) -> jnp.ndarray:
+        """Global ``(n, ...)`` -> padded ``(P, Lmax, ...)``, padding zeroed."""
+        x = jnp.asarray(x)
+        zero = jnp.zeros((1,) + x.shape[1:], x.dtype)
+        return jnp.concatenate([x, zero], axis=0)[self._pad_gather]
+
+    def unpad(self, xp) -> jnp.ndarray:
+        """Padded ``(P, Lmax, ...)`` -> global ``(n, ...)``."""
+        xp = jnp.asarray(xp)
+        flat = xp.reshape((self.num_parts * self.max_part_size,) + xp.shape[2:])
+        return flat[self._unpad_gather]

@@ -24,7 +24,9 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Sequence, Tuple
 
+import numpy as np
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # logical axes eligible for the tensor-parallel mesh axis, in priority order;
@@ -42,6 +44,41 @@ def axis_size(axis_name) -> int:
     if fn is not None:
         return fn(axis_name)
     return jax.lax.psum(1, axis_name)
+
+
+
+# -- padded-shard reduction hygiene --------------------------------------------
+#
+# Distributed vectors are padded to a uniform per-shard length (``Lmax``) so
+# every shard has the same shape under ``shard_map``; the padding slots MUST
+# be excluded from any cross-shard reduction (``psum`` dot / norm), or a
+# ragged partition double-counts whatever happens to sit in them — the
+# classic padded-shard bug.  The distributed BLAS layer routes every
+# reduction operand through :func:`zero_shard_padding` so a reduction is
+# correct even when padding slots hold garbage (e.g. after an operator that
+# writes the full padded shard).
+
+
+def shard_pad_mask(part_sizes: Sequence[int], max_size: int) -> np.ndarray:
+    """(P, max_size) bool mask — True on real slots, False on padding."""
+    sizes = np.asarray(part_sizes, np.int64)
+    if max_size < (int(sizes.max()) if sizes.size else 0):
+        raise ValueError(
+            f"max_size {max_size} smaller than largest part {sizes.max()}"
+        )
+    return np.arange(max_size, dtype=np.int64)[None, :] < sizes[:, None]
+
+
+def zero_shard_padding(x: jax.Array, mask) -> jax.Array:
+    """Zero the padding slots of a (possibly poisoned) padded shard.
+
+    ``mask`` is this shard's slice of :func:`shard_pad_mask` (bool,
+    broadcastable against ``x`` on the trailing shard axis); ``None`` means
+    "no padding" and returns ``x`` unchanged.
+    """
+    if mask is None:
+        return x
+    return jnp.where(mask, x, jnp.zeros((), x.dtype))
 
 
 def _is_axes_leaf(x) -> bool:

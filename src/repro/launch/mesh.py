@@ -8,11 +8,13 @@ tests/benches must keep seeing 1 device.
 
 from __future__ import annotations
 
+import numpy as np
 import jax
 
 __all__ = [
     "make_production_mesh",
     "make_host_mesh",
+    "make_shard_mesh",
     "compat_make_mesh",
     "use_mesh",
     "shard_map",
@@ -70,6 +72,23 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return compat_make_mesh(shape, axes)
+
+
+def make_shard_mesh(num_shards: int, axis: str = "data") -> jax.sharding.Mesh:
+    """1-D mesh over the first ``num_shards`` devices (distributed operators).
+
+    Unlike :func:`make_host_mesh` this deliberately takes a device-count
+    *subset*, so a partition over fewer parts than devices (e.g. 2 shards on
+    an 8-device host platform) still maps one part per device.
+    """
+    devs = jax.devices()
+    if num_shards > len(devs):
+        raise ValueError(
+            f"partition has {num_shards} parts but only {len(devs)} devices "
+            "are available (set XLA_FLAGS=--xla_force_host_platform_device_"
+            "count=N for host-platform testing)"
+        )
+    return jax.sharding.Mesh(np.asarray(devs[:num_shards]), (axis,))
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:

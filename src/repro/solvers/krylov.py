@@ -56,6 +56,27 @@ __all__ = [
 Precond = Union[LinOp, Callable, str]
 
 
+def _dist_route(solver_fn, A, b, x0, *, stop, M, precond_opts, executor, **options):
+    """Delegate to the sharded solve when ``A`` is a distributed operator.
+
+    The distributed layer re-enters ``solver_fn`` with the per-shard local
+    operator (not distributed), so the delegation happens exactly once.
+    """
+    from repro.distributed.solvers import dist_solve
+
+    return dist_solve(
+        solver_fn,
+        A,
+        b,
+        x0,
+        stop=stop,
+        M=M,
+        precond_opts=precond_opts,
+        executor=executor,
+        **options,
+    )
+
+
 def _resolve_precond(A, M, executor, precond_opts):
     if isinstance(M, str):
         from repro.precond import make_preconditioner
@@ -91,6 +112,9 @@ def cg(
     executor=None,
 ) -> SolveResult:
     """Preconditioned conjugate gradient (SPD systems)."""
+    if getattr(A, "is_distributed", False):
+        return _dist_route(cg, A, b, x0, stop=stop, M=M,
+                           precond_opts=precond_opts, executor=executor)
     op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
@@ -134,6 +158,9 @@ def fcg(
 ) -> SolveResult:
     """Flexible CG (Ginkgo's FCG): Polak–Ribière beta = r'(r - r_prev)/rz_prev,
     robust to non-constant preconditioners."""
+    if getattr(A, "is_distributed", False):
+        return _dist_route(fcg, A, b, x0, stop=stop, M=M,
+                           precond_opts=precond_opts, executor=executor)
     op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
@@ -178,6 +205,9 @@ def bicgstab(
     executor=None,
 ) -> SolveResult:
     """Preconditioned BiCGSTAB (general nonsymmetric systems)."""
+    if getattr(A, "is_distributed", False):
+        return _dist_route(bicgstab, A, b, x0, stop=stop, M=M,
+                           precond_opts=precond_opts, executor=executor)
     op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
@@ -226,6 +256,9 @@ def cgs(
 ) -> SolveResult:
     """Conjugate Gradient Squared (Sonneveld) — the paper's solver set's
     transpose-free nonsymmetric method."""
+    if getattr(A, "is_distributed", False):
+        return _dist_route(cgs, A, b, x0, stop=stop, M=M,
+                           precond_opts=precond_opts, executor=executor)
     op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
@@ -278,6 +311,10 @@ def gmres(
     Right-preconditioned: solves A M^{-1} u = b, x = M^{-1} u, so the true
     residual is available without extra applies.
     """
+    if getattr(A, "is_distributed", False):
+        return _dist_route(gmres, A, b, x0, stop=stop, M=M,
+                           precond_opts=precond_opts, executor=executor,
+                           restart=restart)
     op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     n = b.shape[0]
@@ -404,7 +441,16 @@ class KrylovSolver(LinOp):
     ):
         self.A = as_linop(A)
         self.stop = stop
-        self.M = _resolve_precond(A, M, executor, precond_opts)
+        if getattr(self.A, "is_distributed", False):
+            # generation-time resolution for distributed operands goes through
+            # the shard-local generators (a global M cannot apply per shard)
+            from repro.distributed.precond import dist_preconditioner
+
+            self.M = dist_preconditioner(
+                self.A, M, executor=executor, **(precond_opts or {})
+            )
+        else:
+            self.M = _resolve_precond(A, M, executor, precond_opts)
         self.executor = executor
         self.options = options
 

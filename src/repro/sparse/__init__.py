@@ -11,6 +11,7 @@ from repro.sparse.formats import (
     csr_from_arrays,
     csr_from_dense,
     csr_host_arrays,
+    csr_slice_rows_host,
     ell_from_csr_host,
     ell_from_dense,
     sellp_from_csr_host,
@@ -26,6 +27,7 @@ __all__ = [
     "Sellp",
     "convert",
     "csr_host_arrays",
+    "csr_slice_rows_host",
     "coo_from_dense",
     "csr_from_dense",
     "csr_from_arrays",

@@ -28,7 +28,16 @@ import numpy as np
 
 from repro.core.linop import LinOp
 
-__all__ = ["Coo", "Csr", "Ell", "Sellp", "Dense", "convert", "csr_host_arrays"]
+__all__ = [
+    "Coo",
+    "Csr",
+    "Ell",
+    "Sellp",
+    "Dense",
+    "convert",
+    "csr_host_arrays",
+    "csr_slice_rows_host",
+]
 
 
 def _register(cls, data_fields, meta_fields):
@@ -473,6 +482,33 @@ def csr_host_arrays(A) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         )
         return indptr, indices, values
     raise TypeError(f"cannot extract a CSR triplet from {type(A)}")
+
+
+def csr_slice_rows_host(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    values: np.ndarray,
+    lo: int,
+    hi: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Row block ``[lo, hi)`` of a host CSR triplet (setup time).
+
+    The partition-aware split primitive behind the distributed formats: the
+    returned triplet is a self-contained CSR over ``hi - lo`` rows (indptr
+    rebased to 0), with column indices untouched (still global) and per-row
+    entry order preserved.
+    """
+    indptr = np.asarray(indptr)
+    if not (0 <= lo <= hi <= len(indptr) - 1):
+        raise ValueError(
+            f"row range [{lo}, {hi}) outside [0, {len(indptr) - 1})"
+        )
+    start, stop = int(indptr[lo]), int(indptr[hi])
+    return (
+        (indptr[lo : hi + 1] - start).astype(np.int64),
+        np.asarray(indices)[start:stop].astype(np.int64),
+        np.asarray(values)[start:stop],
+    )
 
 
 _CONVERT_TARGETS = {

@@ -12,13 +12,24 @@ executor kernel space.
 
 from __future__ import annotations
 
+import contextlib
+import contextvars
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import registry
 from repro.sparse.formats import Coo, Csr, Dense, Ell, Sellp
 
-__all__ = ["apply", "to_dense", "dot", "axpy", "scal", "norm2"]
+__all__ = [
+    "apply",
+    "to_dense",
+    "dot",
+    "axpy",
+    "scal",
+    "norm2",
+    "distributed_blas",
+]
 
 # =============================================================================
 # SpMV — COO
@@ -299,8 +310,51 @@ def _norm2_xla(ex, x):
     return jnp.sqrt(jnp.vdot(x, x).real)
 
 
+# -- the distributed-reduction context ----------------------------------------
+#
+# Inside a ``shard_map`` body, a vector is one padded shard of the global
+# vector: ``dot``/``norm2`` must reduce locally (still executor-dispatched)
+# and then ``psum`` over the mesh axis, with padding slots masked out of the
+# operands.  The distributed solver layer (:mod:`repro.distributed.solvers`)
+# opens this context around the UNCHANGED solver source — the Krylov methods
+# never learn whether their reductions are local or global, exactly Ginkgo's
+# ``distributed::Vector`` story.  ``axpy``/``scal`` are elementwise and need
+# no collective.
+
+_DIST_BLAS: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_distributed_blas", default=None
+)
+
+
+@contextlib.contextmanager
+def distributed_blas(axis_name: str, mask=None):
+    """Make ``dot``/``norm2`` global over ``axis_name`` (psum of the local
+    partial) with padding slots of the shard masked by ``mask`` (bool,
+    broadcastable; ``None`` = no padding)."""
+    token = _DIST_BLAS.set((axis_name, mask))
+    try:
+        yield
+    finally:
+        _DIST_BLAS.reset(token)
+
+
+def _masked(x, mask):
+    # zero the padding slots so a ragged partition never double-counts them
+    # (the padded-shard bug); lazy import keeps the layering one-directional
+    # everywhere outside this trace-time hook.
+    from repro.distributed.sharding import zero_shard_padding
+
+    return zero_shard_padding(x, mask)
+
+
 def dot(x, y, *, executor=None):
-    return dot_op(x, y, executor=executor)
+    ctx = _DIST_BLAS.get()
+    if ctx is None:
+        return dot_op(x, y, executor=executor)
+    axis_name, mask = ctx
+    # mask BOTH operands: 0 * non-finite padding would still be NaN
+    local = dot_op(_masked(x, mask), _masked(y, mask), executor=executor)
+    return jax.lax.psum(local, axis_name)
 
 
 def axpy(alpha, x, y, *, executor=None):
@@ -312,4 +366,12 @@ def scal(alpha, x, *, executor=None):
 
 
 def norm2(x, *, executor=None):
-    return norm2_op(x, executor=executor)
+    ctx = _DIST_BLAS.get()
+    if ctx is None:
+        return norm2_op(x, executor=executor)
+    axis_name, mask = ctx
+    xm = _masked(x, mask)
+    # local sum of squares through the dispatched dot, global psum, one sqrt —
+    # bit-for-bit the shape Stop.threshold expects from a global norm
+    local = dot_op(xm, xm, executor=executor)
+    return jnp.sqrt(jax.lax.psum(local, axis_name).real)

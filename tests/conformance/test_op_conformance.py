@@ -7,6 +7,7 @@ claim support.  This suite is that matrix for this repo:
 
     (Coo / Csr / Ell / Sellp / Dense) x (spmv, to_dense, BLAS-1, linop_apply)
         x (reference, xla, pallas-interpret)
+    + (DistCsr / DistEll) x dist_spmv x (reference, xla)
 
 where the ``linop_apply`` axis applies *composed* operators (``Sum``,
 ``Composition``, ``ScaledIdentity`` over each format) — the combinator layer
@@ -207,6 +208,43 @@ def test_linop_apply_conformance(fmt, case, exec_kind, n, density, seed):
     # and the reference evaluation must match the dense math
     np.testing.assert_allclose(
         np.asarray(ref, np.float64), want @ x, atol=1e-2, rtol=1e-3
+    )
+
+
+#: the dist_spmv axis: the distributed path joins the conformance matrix on
+#: the reference and xla kernel spaces (the spaces the per-shard local/halo
+#: SpMV dispatches into on CPU); partition over as many parts as this process
+#: has devices, capped at 2 — the per-backend conformance CI steps force a
+#: 2-device host platform so a real halo exchange is pinned there, and a
+#: plain single-device run still covers the P=1 degenerate.
+_DIST_FORMATS = ("csr", "ell")
+
+
+@pytest.mark.parametrize("exec_kind", EXEC_KINDS)
+@pytest.mark.parametrize("fmt", _DIST_FORMATS)
+@settings(max_examples=4)
+@given(
+    n=st.integers(1, 40),
+    density=st.floats(0.05, 0.6),
+    seed=st.integers(0, 10_000),
+)
+def test_dist_spmv_conformance(fmt, exec_kind, n, density, seed):
+    if exec_kind == "pallas_interpret":
+        pytest.skip("distributed path is pinned on the reference/xla spaces")
+    import jax
+
+    from repro.distributed import DistCsr, DistEll, Partition
+
+    a = _pattern(n, n, density, seed)
+    x = np.random.default_rng(seed + 3).normal(size=(n,)).astype(np.float32)
+    A = BUILD[fmt](a)
+    ref = sparse.apply(A, jnp.asarray(x), executor=_reference())
+    parts = min(2, len(jax.devices()), n)
+    dist_cls = {"csr": DistCsr, "ell": DistEll}[fmt]
+    Ad = dist_cls.from_matrix(A, Partition.uniform(n, parts))
+    got = Ad.apply(jnp.asarray(x), executor=make_executor(exec_kind))
+    _assert_conforms(
+        got, ref, what=f"dist_spmv[{fmt}/{parts}p] on {exec_kind}", atol=1e-3
     )
 
 
