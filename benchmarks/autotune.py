@@ -181,6 +181,54 @@ def _spmv_ell_runner(ex):
     return shapes, run
 
 
+def _spmv_dot_runner(ex):
+    from repro import sparse
+    from repro.kernels.spmv_dot.kernel import spmv_dot_ell
+
+    rng = _np_rng()
+    n = 512
+    a = rng.normal(size=(n, n)).astype(np.float32)
+    a[rng.random(a.shape) < 0.95] = 0.0
+    A = sparse.ell_from_dense(a)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    shapes = {
+        "m": A.values.shape[0], "k": A.values.shape[1], "n": n, "itemsize": 4
+    }
+
+    def run(block):
+        return time_fn(
+            lambda: spmv_dot_ell(
+                A.col_idx, A.values, x, w,
+                block_m=block["block_m"], block_k=block["block_k"],
+                interpret=ex.interpret,
+            ),
+            warmup=1, repeats=3,
+        )
+
+    return shapes, run
+
+
+def _axpy_norm_runner(ex):
+    from repro.kernels.axpy_norm.kernel import axpy_norm
+
+    rng = _np_rng()
+    n = 1 << 16
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    shapes = {"n": n, "itemsize": 4}
+
+    def run(block):
+        return time_fn(
+            lambda: axpy_norm(
+                0.5, x, y, block_n=block["block_n"], interpret=ex.interpret
+            ),
+            warmup=1, repeats=3,
+        )
+
+    return shapes, run
+
+
 def _spmv_sellp_runner(ex):
     from repro import sparse
     from repro.kernels.spmv_sellp.kernel import spmv_sellp
@@ -270,6 +318,8 @@ RUNNERS: Dict[str, tuple] = {
     "nn_rwkv6_scan": (_rwkv6_runner, ("pallas", "xla")),
     "nn_ssd_scan": (_ssd_runner, ("pallas", "xla")),
     "spmv_ell": (_spmv_ell_runner, ("pallas",)),
+    "spmv_dot": (_spmv_dot_runner, ("pallas",)),
+    "axpy_norm": (_axpy_norm_runner, ("pallas",)),
     "spmv_sellp": (_spmv_sellp_runner, ("pallas",)),
     "spmv_batch_ell": (_spmv_batch_ell_runner, ("pallas",)),
     "block_jacobi": (_block_jacobi_runner, ("pallas",)),

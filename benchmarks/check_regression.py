@@ -1,0 +1,116 @@
+"""Regression gate over committed BENCH snapshots.
+
+Diffs the current PR's ``BENCH_pr<N>.json`` against the previous PR's
+snapshot (highest ``BENCH_pr<M>.json`` with ``M < N`` in the repo root,
+when present) and fails on regressions in the ``pinned`` block:
+
+* count-type pins (launches per iteration, psums per iteration, iteration
+  deltas, iteration totals) — any INCREASE is a regression (exact compare;
+  these are structural, not timing, so noise is not an excuse);
+* boolean pins — ``True`` degrading to ``False`` is a regression;
+* fraction-of-bound pins — a drop of more than ``TOLERANCE`` (10%) relative
+  to the previous snapshot is a regression; improvements and noise inside
+  the band pass.
+
+Exit code 1 on any regression; 0 otherwise (including when no previous
+snapshot exists — the first PR that ships a snapshot establishes the
+baseline).
+
+Run:  python -m benchmarks.check_regression [--current BENCH_pr6.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+TOLERANCE = 0.10  # >10% drop on ratio-valued pins fails
+
+
+def _pr_number(path: str) -> int:
+    m = re.search(r"BENCH_pr(\d+)\.json$", path)
+    return int(m.group(1)) if m else -1
+
+
+def find_previous(current_path: str) -> str | None:
+    cur = _pr_number(current_path)
+    root = os.path.dirname(os.path.abspath(current_path)) or "."
+    older = [
+        p for p in glob.glob(os.path.join(root, "BENCH_pr*.json"))
+        if 0 <= _pr_number(p) < cur
+    ]
+    return max(older, key=_pr_number) if older else None
+
+
+def compare(prev: dict, cur: dict) -> list:
+    """Return a list of human-readable regression descriptions."""
+    regressions = []
+    prev_pinned = prev.get("pinned", {})
+    cur_pinned = cur.get("pinned", {})
+    for key, old in sorted(prev_pinned.items()):
+        if key not in cur_pinned:
+            regressions.append(f"pinned case {key!r} disappeared")
+            continue
+        new = cur_pinned[key]
+        if isinstance(old, bool):
+            if old and not new:
+                regressions.append(f"{key}: True -> False")
+        elif isinstance(old, int):
+            if new > old:
+                regressions.append(f"{key}: {old} -> {new} (count increased)")
+        elif isinstance(old, float):
+            if old > 0 and new < old * (1.0 - TOLERANCE):
+                regressions.append(
+                    f"{key}: {old:.4f} -> {new:.4f} "
+                    f"(dropped more than {TOLERANCE:.0%})"
+                )
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default=None,
+                    help="current snapshot (default: highest BENCH_pr*.json)")
+    ap.add_argument("--previous", default=None,
+                    help="previous snapshot (default: auto-discover)")
+    args = ap.parse_args(argv)
+
+    current = args.current
+    if current is None:
+        snaps = sorted(glob.glob("BENCH_pr*.json"), key=_pr_number)
+        if not snaps:
+            print("no BENCH_pr*.json snapshot found — nothing to gate")
+            return 0
+        current = snaps[-1]
+    with open(current) as f:
+        cur = json.load(f)
+    if cur.get("schema") != "repro-bench/1":
+        print(f"{current}: unknown schema {cur.get('schema')!r}")
+        return 1
+
+    previous = args.previous or find_previous(current)
+    if previous is None:
+        print(f"{current}: no previous snapshot — baseline established, pass")
+        return 0
+    with open(previous) as f:
+        prev = json.load(f)
+
+    regressions = compare(prev, cur)
+    if regressions:
+        print(f"REGRESSIONS vs {previous}:")
+        for r in regressions:
+            print(f"  - {r}")
+        return 1
+    print(
+        f"{current}: {len(cur.get('pinned', {}))} pinned cases OK "
+        f"vs {previous}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

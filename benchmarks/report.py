@@ -1,0 +1,293 @@
+"""BENCH snapshot: the PR's perf surface as one schema'd JSON artifact.
+
+Collects, with the same measurement machinery as the CSV benchmarks:
+
+* achieved GB/s vs :func:`benchmarks.common.spmv_bandwidth_bound` per
+  op (plain vs fused SpMV) x format x executor;
+* Krylov time-to-tolerance plus fused-vs-unfused-vs-pipelined iteration
+  timings on the solve hot path;
+* distributed per-shard streaming bandwidth and the psum-per-iteration
+  structure of pipelined CG (when the process has multiple devices).
+
+The ``pinned`` block holds the values the regression gate
+(:mod:`benchmarks.check_regression`) diffs across PR snapshots — chosen to
+be structural (launch counts, collective counts, iteration deltas) or
+fraction-of-bound ratios, which survive CI timing noise far better than raw
+microseconds.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --bench-json BENCH_pr6.json
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (
+    banded,
+    spmv_bandwidth_bound,
+    stencil_2d,
+    time_fn,
+    tridiag,
+)
+
+SCHEMA = "repro-bench/1"
+PR = 6
+
+
+def _spd(n=96):
+    a = np.zeros((n, n), np.float32)
+    for i in range(n):
+        a[i, i] = 4.0
+        if i > 0:
+            a[i, i - 1] = a[i - 1, i] = -1.0
+        if i > 2:
+            a[i, i - 3] = a[i - 3, i] = -0.5
+    return a
+
+
+def _spmv_records(bw: float) -> List[dict]:
+    """(op x format x executor) achieved GB/s against the roofline bound."""
+    from repro import sparse
+    from repro.core import make_executor, registry
+
+    suite = {
+        "stencil2d_16": stencil_2d(16),
+        "tridiag_512": tridiag(512),
+        "banded_256": banded(256),
+    }
+    build = {"csr": sparse.csr_from_dense, "ell": sparse.ell_from_dense}
+    # interpret-mode timing is not hardware-representative; one tiny case
+    # keeps the executor axis exercised without minutes of interpreter time
+    executors = {
+        "xla": (make_executor("xla"), set(suite)),
+        "pallas_interpret": (make_executor("pallas_interpret"), {"stencil2d_16"}),
+    }
+    records = []
+    for mat_name, a in suite.items():
+        n = a.shape[0]
+        nnz = int((a != 0).sum())
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+        for fmt, mk in build.items():
+            A = mk(a)
+            itemsize = np.dtype(A.dtype).itemsize
+            bound = spmv_bandwidth_bound(A, bw, nnz)
+            for ex_name, (ex, mats) in executors.items():
+                if mat_name not in mats:
+                    continue
+                plain_bytes = A.memory_bytes + 2 * n * itemsize
+                fused_bytes = A.memory_bytes + 3 * n * itemsize
+                for op_name, fn, bytes_moved in (
+                    (
+                        f"spmv_{fmt}",
+                        jax.jit(lambda xx, A=A, ex=ex: sparse.apply(
+                            A, xx, executor=ex)),
+                        plain_bytes,
+                    ),
+                    (
+                        f"spmv_dot_{fmt}",
+                        jax.jit(lambda xx, A=A, ex=ex: registry.operation(
+                            f"spmv_dot_{fmt}")(A, xx, w, executor=ex)),
+                        fused_bytes,
+                    ),
+                ):
+                    t = time_fn(fn, x)
+                    gbs = bytes_moved / t / 1e9
+                    gflops = 2 * nnz / t / 1e9
+                    records.append({
+                        "kind": "spmv",
+                        "op": op_name,
+                        "format": fmt,
+                        "executor": ex_name,
+                        "matrix": mat_name,
+                        "time_us": t * 1e6,
+                        "gbs": gbs,
+                        "bound_gbs": bw / 1e9,
+                        "frac_of_bound": gbs / (bw / 1e9),
+                        "gflops": gflops,
+                        "bound_gflops": bound / 1e9,
+                    })
+    return records
+
+
+def _solver_records() -> tuple:
+    """Fused / unfused / pipelined CG timings + launch accounting."""
+    from repro import sparse
+    from repro.core import make_executor
+    from repro.solvers import Stop
+    from repro.solvers.krylov import cg
+
+    a = _spd(256)
+    rng = np.random.default_rng(2)
+    b = jnp.asarray((a @ rng.normal(size=a.shape[0])).astype(np.float32))
+    A = sparse.csr_from_dense(a)
+    ex = make_executor("xla")
+    stop = Stop(max_iters=500, reduction_factor=1e-6)
+
+    records, pinned = [], {}
+    iters = {}
+    for variant, opts in (
+        ("unfused", {"fused": False}),
+        ("fused", {"fused": True}),
+        ("pipelined", {"pipeline": True}),
+    ):
+        fn = jax.jit(lambda bb, opts=opts: cg(
+            A, bb, stop=stop, executor=ex, **opts).x)
+        t = time_fn(fn, b)
+        res = cg(A, b, stop=stop, executor=ex, **opts)
+        k = int(res.iterations)
+        iters[variant] = k
+        records.append({
+            "kind": "solver",
+            "solver": f"cg_{variant}",
+            "matrix": "spd_stencil_256",
+            "executor": "xla",
+            "iterations": k,
+            "converged": bool(res.converged),
+            "time_to_tol_s": t,
+            "time_per_iter_us": t / max(k, 1) * 1e6,
+        })
+
+    # structural launch accounting (trace counts — immune to timing noise)
+    ex.dispatch_log.clear()
+    cg(A, b, stop=stop, executor=ex, fused=True)
+    log = dict(ex.dispatch_log)
+    fused_body = log.get("spmv_dot_csr", 0) + log.get("axpy_norm", 0)
+    ex.dispatch_log.clear()
+    cg(A, b, stop=stop, executor=ex, fused=False)
+    log = dict(ex.dispatch_log)
+    unfused_body = (
+        (log.get("spmv_csr", 0) - 1)
+        + (log.get("blas_dot", 0) - 1)
+        + (log.get("blas_norm2", 0) - 2)
+        + log.get("blas_axpy", 0)
+    )
+    pinned.update({
+        "fused_cg_body_launches": fused_body,
+        "unfused_cg_body_launches": unfused_body,
+        "fused_unfused_iters_equal": iters["fused"] == iters["unfused"],
+        "pipelined_iter_delta": abs(iters["pipelined"] - iters["unfused"]),
+        "cg_iterations": iters["unfused"],
+    })
+    return records, pinned
+
+
+def _dist_records() -> tuple:
+    """Per-shard bandwidth + pipelined psum structure (multi-device only)."""
+    from benchmarks.bench_dist import shard_bytes
+    from repro import sparse
+    from repro.core import make_executor
+    from repro.distributed import DistCsr, DistEll, Partition
+    from repro.solvers import Stop
+    from repro.solvers.krylov import cg
+
+    ndev = len(jax.devices())
+    if ndev < 2:
+        return [], {}
+    a = _spd(96)
+    n = a.shape[0]
+    nnz = int((a != 0).sum())
+    parts = min(ndev, 8)
+    part = Partition.uniform(n, parts)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    ex = make_executor("xla")
+
+    records = []
+    for fmt, cls in (("csr", DistCsr), ("ell", DistEll)):
+        Ad = cls.from_matrix(sparse.csr_from_dense(a), part)
+        fn = jax.jit(lambda xx, Ad=Ad: Ad.apply(xx, executor=ex))
+        t = time_fn(fn, x)
+        records.append({
+            "kind": "dist_spmv",
+            "format": fmt,
+            "executor": "xla",
+            "parts": parts,
+            "matrix": "spd_stencil_96",
+            "time_us": t * 1e6,
+            "shard_gbs": shard_bytes(Ad, x.dtype.itemsize) / t / 1e9,
+            "gflops": 2 * nnz / t / 1e9,
+        })
+
+    # psum-per-iteration structure of the sharded solves
+    def _find_while(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "while":
+                return eqn
+            for v in eqn.params.values():
+                sub = getattr(v, "jaxpr", v if hasattr(v, "eqns") else None)
+                if sub is not None:
+                    w = _find_while(sub)
+                    if w is not None:
+                        return w
+        return None
+
+    def _psums(jaxpr, acc):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name.startswith("psum"):
+                acc.append(eqn.primitive.name)
+            for v in eqn.params.values():
+                sub = getattr(v, "jaxpr", v if hasattr(v, "eqns") else None)
+                if sub is not None:
+                    _psums(sub, acc)
+        return acc
+
+    Ad = DistCsr.from_matrix(sparse.csr_from_dense(a), part)
+    b = jnp.asarray((a @ rng.normal(size=n)).astype(np.float32))
+    stop = Stop(max_iters=400, reduction_factor=1e-6)
+    pinned = {}
+    for variant, opts in (("pipelined", {"pipeline": True}), ("standard", {})):
+        jaxpr = jax.make_jaxpr(lambda bb, opts=opts: cg(
+            Ad, bb, stop=stop, executor=ex, **opts).x)(b)
+        w = _find_while(jaxpr.jaxpr)
+        pinned[f"psums_per_iteration_{variant}"] = (
+            len(_psums(w.params["body_jaxpr"].jaxpr, [])) if w else -1
+        )
+    return records, pinned
+
+
+def collect() -> Dict:
+    from benchmarks import bench_stream
+
+    print("# stream bandwidth (roofline denominator)")
+    bw = bench_stream.run(sizes=(1 << 22,))
+    print("# spmv: plain vs fused, per format x executor")
+    spmv = _spmv_records(bw)
+    print("# solvers: fused / unfused / pipelined CG")
+    solver, solver_pinned = _solver_records()
+    print("# distributed: per-shard bandwidth + psum structure")
+    dist, dist_pinned = _dist_records()
+
+    pinned = dict(solver_pinned, **dist_pinned)
+    # frac-of-bound for the pinned spmv cases (xla space: real timings)
+    for r in spmv:
+        if r["executor"] == "xla":
+            pinned[f"frac_{r['op']}_{r['matrix']}"] = round(
+                r["frac_of_bound"], 4
+            )
+    return {
+        "schema": SCHEMA,
+        "pr": PR,
+        "env": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "devices": len(jax.devices()),
+        },
+        "records": spmv + solver + dist,
+        "pinned": pinned,
+    }
+
+
+def write(path: str) -> str:
+    snap = collect()
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {len(snap['records'])} records -> {path}")
+    return path

@@ -11,6 +11,7 @@ Emits ``name,us_per_call,derived`` CSV lines:
 Run: PYTHONPATH=src python -m benchmarks.run [--full]
      PYTHONPATH=src python -m benchmarks.run --smoke
      PYTHONPATH=src python -m benchmarks.run --autotune [--target NAME] [--out PATH]
+     PYTHONPATH=src python -m benchmarks.run --bench-json BENCH_pr6.json
 
 ``--smoke`` is the CI gate: one batched solve plus one mixed-precision IR
 solve end to end (asserting convergence), fast enough for every PR —
@@ -21,6 +22,11 @@ nightly figures.
 figures: it measures candidate tile geometries per op (benchmarks/autotune.py)
 and persists the winners as a per-target tuning table consumable by
 ``repro.core.tuning.load_table`` / the ``REPRO_TUNING_PATH`` env var.
+
+``--bench-json PATH`` writes the schema'd BENCH snapshot (benchmarks/report.py)
+instead of CSV: fused-vs-plain SpMV frac-of-bound, solver time-to-tolerance,
+launch/collective structure pins — the artifact the regression gate
+(benchmarks/check_regression.py) diffs across PRs.
 """
 
 from __future__ import annotations
@@ -43,8 +49,17 @@ def main() -> None:
                          "(see repro.core.params.TARGETS)")
     ap.add_argument("--out", default=None,
                     help="tuning-table output path for --autotune")
+    ap.add_argument("--bench-json", default=None, metavar="PATH",
+                    help="write the schema'd BENCH snapshot (JSON) instead "
+                         "of the CSV figures")
     args = ap.parse_args()
     small = not args.full
+
+    if args.bench_json:
+        from benchmarks import report
+
+        report.write(args.bench_json)
+        return
 
     if args.autotune:
         from benchmarks import autotune

@@ -25,6 +25,7 @@ __all__ = [
     "apply_batch",
     "batch_dot",
     "batch_axpy",
+    "batch_axpy_norm",
     "batch_scal",
     "batch_norm2",
 ]
@@ -184,3 +185,17 @@ def batch_scal(alpha, X, *, executor=None):
 
 def batch_norm2(X, *, executor=None):
     return batch_norm2_op(X, executor=executor)
+
+
+def batch_axpy_norm(alpha, X, Y, *, executor=None):
+    """Fused ``(Z, ‖Z[b]‖²)`` with ``Z = alpha[:, None] * X + Y``.
+
+    Delegates to the SAME ``axpy_norm`` operation the single-vector Krylov
+    loops use (its implementations handle both 1-D and ``(nb, n)`` operands),
+    so the batched convergence-mask reduction and the single-system stopping
+    norm share one fused implementation per kernel space instead of
+    recomputing the mask norm with separate dot launches.
+    """
+    from repro.sparse.ops import axpy_norm_op
+
+    return axpy_norm_op(alpha, X, Y, executor=executor)

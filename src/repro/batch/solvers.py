@@ -284,7 +284,9 @@ def batch_cg(
         # active SPD systems have pAp > 0 and rz > 0
         alpha = rz / jnp.where(pAp == 0, 1.0, pAp)
         Xn = ops.batch_axpy(alpha, P, X, executor=ex)
-        Rn = ops.batch_axpy(-alpha, AP, R, executor=ex)
+        # fused residual update + per-system ‖R‖² — the convergence-mask
+        # reduction rides the same pass as the axpy (shared with single CG)
+        Rn, rr = ops.batch_axpy_norm(-alpha, AP, R, executor=ex)
         Zn = M(Rn)
         rz_new = ops.batch_dot(Rn, Zn, executor=ex)
         beta = rz_new / jnp.where(rz == 0, 1.0, rz)
@@ -294,7 +296,7 @@ def batch_cg(
         Z = jnp.where(a2, Zn, Z)
         P = jnp.where(a2, Pn, P)
         rz = jnp.where(active, rz_new, rz)
-        rnorm = jnp.where(active, ops.batch_norm2(Rn, executor=ex), rnorm)
+        rnorm = jnp.where(active, jnp.sqrt(rr), rnorm)
         iters = iters + active.astype(jnp.int32)
         return X, R, Z, P, rz, iters, k + 1, rnorm
 
@@ -351,7 +353,8 @@ def batch_bicgstab(
             ops.batch_dot(T, T, executor=ex) + eps
         )
         Xn = X + alpha[:, None] * P_hat + omega[:, None] * S_hat
-        Rn = ops.batch_axpy(-omega, T, S, executor=ex)
+        # fused residual update + per-system ‖R‖² (same op as single BiCGSTAB)
+        Rn, rr = ops.batch_axpy_norm(-omega, T, S, executor=ex)
         rho_new = ops.batch_dot(R_hat, Rn, executor=ex)
         beta = (rho_new / (rho + eps)) * (alpha / (omega + eps))
         Pn = Rn + beta[:, None] * (P - omega[:, None] * V)
@@ -359,7 +362,7 @@ def batch_bicgstab(
         R = jnp.where(a2, Rn, R)
         P = jnp.where(a2, Pn, P)
         rho = jnp.where(active, rho_new, rho)
-        rnorm = jnp.where(active, ops.batch_norm2(Rn, executor=ex), rnorm)
+        rnorm = jnp.where(active, jnp.sqrt(rr), rnorm)
         iters = iters + active.astype(jnp.int32)
         return X, R, P, rho, iters, k + 1, rnorm
 

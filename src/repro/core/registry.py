@@ -84,6 +84,17 @@ class Operation:
             f"registered: {sorted(self._impls)})"
         )
 
+    def supports(self, executor) -> bool:
+        """Does any of the executor's kernel spaces serve this operation?
+
+        The *optional-op* capability probe: algorithm layers (the fused Krylov
+        paths) ask before relying on an op that only some backends register,
+        and fall back to the portable formulation when the answer is False —
+        instead of tripping :class:`NotCompiledError` at dispatch time.
+        """
+        spaces = (executor.kernel_space,) if executor.strict else executor.spaces
+        return any(space in self._impls for space in spaces)
+
     def space_used(self, executor) -> str:
         """Which kernel space would serve this executor (for tests/telemetry)."""
         spaces = (executor.kernel_space,) if executor.strict else executor.spaces

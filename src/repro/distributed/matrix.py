@@ -11,9 +11,16 @@ stores TWO blocks (exactly Ginkgo's local/non-local decomposition):
   onto the shard's *halo column set* (the unique remote columns it touches),
   applied against the gathered remote entries.
 
-SpMV is then ``y_p = A_pp x_p + A_halo_p gather(x)[halo_cols_p]`` under
-``shard_map`` over the mesh data axis: one ``all_gather`` of the padded
-``x`` shards per apply, followed by the host-precomputed halo-column gather.
+The local block is further split row-wise at partition time into an
+**interior** class (rows touching no halo column) and a **boundary** class
+(rows that do): the apply issues the halo ``all_gather`` first and runs the
+interior SpMV while the collective is in flight — halo-exchange/compute
+overlap, with the row classification decided once on the host.
+
+SpMV is then ``y_p = A_int_p x_p + A_bnd_p x_p + A_halo_p
+gather(x)[halo_cols_p]`` under ``shard_map`` over the mesh data axis: one
+``all_gather`` of the padded ``x`` shards per apply, followed by the
+host-precomputed halo-column gather.
 Both block SpMVs dispatch through the ordinary format registry, so every
 shard's local kernel still resolves tile geometry via
 ``Executor.launch_config`` — the per-target tuning tables apply per shard.
@@ -77,6 +84,13 @@ def split_by_rows(indptr, indices, values, partition: Partition) -> List[dict]:
     shard's square diagonal block, columns rebased), ``halo`` (CSR triplet
     whose columns index into ``halo_cols``), and ``halo_cols`` (sorted unique
     global columns this part needs from other parts).
+
+    The local block is additionally classified row-wise for the
+    overlap-capable formats: ``interior`` holds the local entries of rows
+    that touch NO halo column (computable before any communication lands)
+    and ``boundary`` the local entries of rows that do.  The two are
+    row-disjoint and together exactly the ``local`` triplet — the
+    compute/communication overlap split, decided once at partition time.
     """
     indptr = np.asarray(indptr, np.int64)
     parts = []
@@ -91,10 +105,16 @@ def split_by_rows(indptr, indices, values, partition: Partition) -> List[dict]:
             np.add.at(counts, rows[sel] + 1, 1)
             return (np.cumsum(counts), cols, v[sel])
 
+        has_halo = np.zeros(hi - lo, bool)
+        has_halo[rows[~is_local]] = True
+        is_int = is_local & ~has_halo[rows]
+        is_bnd = is_local & has_halo[rows]
         halo_cols = np.unique(j[~is_local])
         parts.append(
             {
                 "local": _triplet(is_local, j[is_local] - lo),
+                "interior": _triplet(is_int, j[is_int] - lo),
+                "boundary": _triplet(is_bnd, j[is_bnd] - lo),
                 "halo": _triplet(
                     ~is_local, np.searchsorted(halo_cols, j[~is_local])
                 ),
@@ -151,24 +171,34 @@ class DistLinOp(LinOp):
     is_distributed = True
     axis_name = DATA_AXIS
 
+    #: ordered value-array field names (first one defines the dtype)
+    _value_fields: Tuple[str, ...] = ()
+
     # -- subclass surface: per-shard apply pieces ------------------------------
     def _local_blocks(self, executor):
-        """(local_block, halo_block_or_None, halo_map) for THIS shard."""
+        """(interior, boundary_or_None, halo_block_or_None, halo_map) for THIS
+        shard.  ``boundary``/``halo`` are ``None`` when the shard touches no
+        remote column (then ``interior`` is the whole diagonal block)."""
         raise NotImplementedError
 
     def local_operator(self, executor=None) -> LinOp:
         part = self.partition
         Lmax = part.max_part_size
-        local, halo, halo_map = self._local_blocks(executor)
+        interior, boundary, halo, halo_map = self._local_blocks(executor)
 
         def matvec(x_l):
             from repro.sparse import ops as sparse_ops
 
-            y = sparse_ops.apply(local, x_l, executor=executor)
-            if halo is not None:
-                xg = jax.lax.all_gather(x_l, self.axis_name, tiled=True)
-                y = y + sparse_ops.apply(halo, xg[halo_map], executor=executor)
-            return y
+            if halo is None:
+                return sparse_ops.apply(interior, x_l, executor=executor)
+            # issue the collective FIRST, then the interior SpMV: interior
+            # rows touch no halo column, so XLA's latency-hiding scheduler is
+            # free to run that matvec while the all_gather is in flight; only
+            # the boundary/halo contributions wait on the gathered x.
+            xg = jax.lax.all_gather(x_l, self.axis_name, tiled=True)
+            y = sparse_ops.apply(interior, x_l, executor=executor)
+            y = y + sparse_ops.apply(boundary, x_l, executor=executor)
+            return y + sparse_ops.apply(halo, xg[halo_map], executor=executor)
 
         return MatrixFreeOp(matvec, shape=(Lmax, Lmax), dtype=self.dtype)
 
@@ -199,7 +229,7 @@ class DistLinOp(LinOp):
     # -- common reporting ------------------------------------------------------
     @property
     def dtype(self):
-        return self.local_values.dtype
+        return getattr(self, self._value_fields[0]).dtype
 
     @property
     def memory_bytes(self) -> int:
@@ -216,8 +246,10 @@ class DistLinOp(LinOp):
     def astype(self, dtype) -> "DistLinOp":
         return dataclasses.replace(
             self,
-            local_values=self.local_values.astype(dtype),
-            halo_values=self.halo_values.astype(dtype),
+            **{
+                f: getattr(self, f).astype(dtype)
+                for f in self._value_fields
+            },
         )
 
 
@@ -241,11 +273,19 @@ def _halo_map_padded(parts, partition: Partition) -> Tuple[np.ndarray, Tuple[int
 
 @dataclasses.dataclass(frozen=True)
 class DistCsr(DistLinOp):
-    """Row-partitioned CSR: per-shard local + halo CSR blocks."""
+    """Row-partitioned CSR: per-shard interior + boundary + halo CSR blocks.
 
-    local_indptr: jax.Array  # (P, Lmax+1) i32
-    local_indices: jax.Array  # (P, K_loc) i32, shard-local columns
-    local_values: jax.Array  # (P, K_loc)
+    The diagonal (local) block is stored split by row class — ``int_*`` for
+    rows touching no halo column, ``bnd_*`` for rows that do — so the apply
+    can run the interior SpMV while the halo ``all_gather`` is in flight.
+    """
+
+    int_indptr: jax.Array  # (P, Lmax+1) i32
+    int_indices: jax.Array  # (P, K_int) i32, shard-local columns
+    int_values: jax.Array  # (P, K_int)
+    bnd_indptr: jax.Array  # (P, Lmax+1) i32
+    bnd_indices: jax.Array  # (P, K_bnd) i32, shard-local columns
+    bnd_values: jax.Array  # (P, K_bnd)
     halo_indptr: jax.Array  # (P, Lmax+1) i32
     halo_indices: jax.Array  # (P, K_halo) i32, into the halo column set
     halo_values: jax.Array  # (P, K_halo)
@@ -255,20 +295,27 @@ class DistCsr(DistLinOp):
     partition: Partition  # static
     _halo_counts: Tuple[int, ...]  # static — true halo sizes per part
 
+    _value_fields = ("int_values", "bnd_values", "halo_values")
+
     @classmethod
     def from_matrix(cls, A, partition: Partition) -> "DistCsr":
         indptr, indices, values, n = _square_host_csr(A, partition)
         parts = split_by_rows(indptr, indices, values, partition)
         Lmax = partition.max_part_size
-        k_loc = max(1, max(len(p["local"][2]) for p in parts))
+        k_int = max(1, max(len(p["interior"][2]) for p in parts))
+        k_bnd = max(1, max(len(p["boundary"][2]) for p in parts))
         k_halo = max(1, max(len(p["halo"][2]) for p in parts))
-        li, lj, lv = _stack_csr([p["local"] for p in parts], Lmax, k_loc)
+        ii, ij, iv = _stack_csr([p["interior"] for p in parts], Lmax, k_int)
+        bi, bj, bv = _stack_csr([p["boundary"] for p in parts], Lmax, k_bnd)
         hi_, hj, hv = _stack_csr([p["halo"] for p in parts], Lmax, k_halo)
         halo_map, counts = _halo_map_padded(parts, partition)
         return cls(
-            local_indptr=jnp.asarray(li),
-            local_indices=jnp.asarray(lj),
-            local_values=jnp.asarray(lv),
+            int_indptr=jnp.asarray(ii),
+            int_indices=jnp.asarray(ij),
+            int_values=jnp.asarray(iv),
+            bnd_indptr=jnp.asarray(bi),
+            bnd_indices=jnp.asarray(bj),
+            bnd_values=jnp.asarray(bv),
             halo_indptr=jnp.asarray(hi_),
             halo_indices=jnp.asarray(hj),
             halo_values=jnp.asarray(hv),
@@ -280,33 +327,61 @@ class DistCsr(DistLinOp):
         )
 
     def local_block(self, p: int) -> Csr:
-        """Part ``p``'s padded square diagonal block as a plain Csr."""
+        """Part ``p``'s padded square diagonal block as a plain Csr.
+
+        Re-merges the interior/boundary row classes (row-disjoint by
+        construction) into one CSR on the host — the shape the per-shard
+        preconditioner generators expect.
+        """
         L = self.partition.max_part_size
+        iip = np.asarray(self.int_indptr[p], np.int64)
+        bip = np.asarray(self.bnd_indptr[p], np.int64)
+        ij = np.asarray(self.int_indices[p])[: iip[-1]]
+        iv = np.asarray(self.int_values[p])[: iip[-1]]
+        bj = np.asarray(self.bnd_indices[p])[: bip[-1]]
+        bv = np.asarray(self.bnd_values[p])[: bip[-1]]
+        rows = np.concatenate(
+            [
+                np.repeat(np.arange(L, dtype=np.int64), np.diff(iip)),
+                np.repeat(np.arange(L, dtype=np.int64), np.diff(bip)),
+            ]
+        )
+        order = np.argsort(rows, kind="stable")
+        indptr = np.cumsum(
+            np.concatenate([[0], np.diff(iip) + np.diff(bip)])
+        ).astype(np.int32)
         return Csr(
-            self.local_indptr[p], self.local_indices[p], self.local_values[p],
+            jnp.asarray(indptr),
+            jnp.asarray(np.concatenate([ij, bj])[order]),
+            jnp.asarray(np.concatenate([iv, bv])[order]),
             shape=(L, L),
         )
 
     def _local_blocks(self, executor):
         L = self.partition.max_part_size
         h_max = self.halo_map.shape[-1]
-        local = Csr(
-            self.local_indptr[0], self.local_indices[0], self.local_values[0],
+        interior = Csr(
+            self.int_indptr[0], self.int_indices[0], self.int_values[0],
             shape=(L, L),
         )
         if h_max == 0:
-            return local, None, None
+            return interior, None, None, None
+        boundary = Csr(
+            self.bnd_indptr[0], self.bnd_indices[0], self.bnd_values[0],
+            shape=(L, L),
+        )
         halo = Csr(
             self.halo_indptr[0], self.halo_indices[0], self.halo_values[0],
             shape=(L, h_max),
         )
-        return local, halo, self.halo_map[0]
+        return interior, boundary, halo, self.halo_map[0]
 
 
 _register(
     DistCsr,
     [
-        "local_indptr", "local_indices", "local_values",
+        "int_indptr", "int_indices", "int_values",
+        "bnd_indptr", "bnd_indices", "bnd_values",
         "halo_indptr", "halo_indices", "halo_values", "halo_map",
     ],
     ["shape", "nnz", "partition", "_halo_counts"],
@@ -320,14 +395,21 @@ _register(
 
 @dataclasses.dataclass(frozen=True)
 class DistEll(DistLinOp):
-    """Row-partitioned ELL: per-shard local + halo ELL blocks.
+    """Row-partitioned ELL: per-shard interior + boundary + halo ELL blocks.
 
     Padding entries use the format's own (col 0, value 0) convention in both
-    the shard-local and halo-column index spaces.
+    the shard-local and halo-column index spaces.  As in :class:`DistCsr`,
+    the diagonal block is split row-wise into interior (no halo columns in
+    the row) and boundary classes so the interior SpMV overlaps the halo
+    ``all_gather``; each class carries its own ELL width (``k_int`` /
+    ``k_bnd``), so the split often *shrinks* stored bytes when boundary rows
+    are the long ones.
     """
 
-    local_col_idx: jax.Array  # (P, Lmax, k_loc) i32
-    local_values: jax.Array  # (P, Lmax, k_loc)
+    int_col_idx: jax.Array  # (P, Lmax, k_int) i32
+    int_values: jax.Array  # (P, Lmax, k_int)
+    bnd_col_idx: jax.Array  # (P, Lmax, k_bnd) i32
+    bnd_values: jax.Array  # (P, Lmax, k_bnd)
     halo_col_idx: jax.Array  # (P, Lmax, k_halo) i32, into the halo column set
     halo_values: jax.Array  # (P, Lmax, k_halo)
     halo_map: jax.Array  # (P, H_max) i32
@@ -335,6 +417,8 @@ class DistEll(DistLinOp):
     nnz: int
     partition: Partition
     _halo_counts: Tuple[int, ...]
+
+    _value_fields = ("int_values", "bnd_values", "halo_values")
 
     @classmethod
     def from_matrix(cls, A, partition: Partition) -> "DistEll":
@@ -351,18 +435,24 @@ class DistEll(DistLinOp):
                 ),
             )
 
-        k_loc, k_halo = max_row_nnz("local"), max_row_nnz("halo")
-        lc = np.zeros((partition.num_parts, Lmax, k_loc), np.int32)
-        lv = np.zeros((partition.num_parts, Lmax, k_loc), values.dtype)
+        k_int, k_bnd = max_row_nnz("interior"), max_row_nnz("boundary")
+        k_halo = max_row_nnz("halo")
+        ic = np.zeros((partition.num_parts, Lmax, k_int), np.int32)
+        iv = np.zeros((partition.num_parts, Lmax, k_int), values.dtype)
+        bc = np.zeros((partition.num_parts, Lmax, k_bnd), np.int32)
+        bv = np.zeros((partition.num_parts, Lmax, k_bnd), values.dtype)
         hc = np.zeros((partition.num_parts, Lmax, k_halo), np.int32)
         hv = np.zeros((partition.num_parts, Lmax, k_halo), values.dtype)
         for p, info in enumerate(parts):
-            lc[p], lv[p] = _ell_arrays(*info["local"], Lmax, k_loc)
+            ic[p], iv[p] = _ell_arrays(*info["interior"], Lmax, k_int)
+            bc[p], bv[p] = _ell_arrays(*info["boundary"], Lmax, k_bnd)
             hc[p], hv[p] = _ell_arrays(*info["halo"], Lmax, k_halo)
         halo_map, counts = _halo_map_padded(parts, partition)
         return cls(
-            local_col_idx=jnp.asarray(lc),
-            local_values=jnp.asarray(lv),
+            int_col_idx=jnp.asarray(ic),
+            int_values=jnp.asarray(iv),
+            bnd_col_idx=jnp.asarray(bc),
+            bnd_values=jnp.asarray(bv),
             halo_col_idx=jnp.asarray(hc),
             halo_values=jnp.asarray(hv),
             halo_map=jnp.asarray(halo_map),
@@ -373,22 +463,33 @@ class DistEll(DistLinOp):
         )
 
     def local_block(self, p: int) -> Ell:
+        # interior and boundary are row-disjoint; concatenating along the
+        # width axis re-merges them (the inactive class contributes only
+        # (col 0, value 0) padding slots — zero by the ELL convention)
         L = self.partition.max_part_size
-        return Ell(self.local_col_idx[p], self.local_values[p], shape=(L, L))
+        return Ell(
+            jnp.concatenate([self.int_col_idx[p], self.bnd_col_idx[p]], axis=1),
+            jnp.concatenate([self.int_values[p], self.bnd_values[p]], axis=1),
+            shape=(L, L),
+        )
 
     def _local_blocks(self, executor):
         L = self.partition.max_part_size
         h_max = self.halo_map.shape[-1]
-        local = Ell(self.local_col_idx[0], self.local_values[0], shape=(L, L))
+        interior = Ell(self.int_col_idx[0], self.int_values[0], shape=(L, L))
         if h_max == 0:
-            return local, None, None
+            return interior, None, None, None
+        boundary = Ell(self.bnd_col_idx[0], self.bnd_values[0], shape=(L, L))
         halo = Ell(self.halo_col_idx[0], self.halo_values[0], shape=(L, h_max))
-        return local, halo, self.halo_map[0]
+        return interior, boundary, halo, self.halo_map[0]
 
 
 _register(
     DistEll,
-    ["local_col_idx", "local_values", "halo_col_idx", "halo_values", "halo_map"],
+    [
+        "int_col_idx", "int_values", "bnd_col_idx", "bnd_values",
+        "halo_col_idx", "halo_values", "halo_map",
+    ],
     ["shape", "nnz", "partition", "_halo_counts"],
 )
 

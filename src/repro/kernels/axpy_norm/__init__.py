@@ -1,0 +1,1 @@
+"""Fused axpy + squared-norm kernel family (apply-with-reduction)."""

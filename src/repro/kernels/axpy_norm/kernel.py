@@ -1,0 +1,74 @@
+"""Fused axpy + squared-norm Pallas TPU kernel — apply-with-reduction.
+
+The second arXiv:2011.08879 fusion on the Krylov hot path: every iteration
+updates the residual (``r ← r - α·Ap``) and immediately needs ``‖r‖²`` for
+the stopping criterion.  Unfused, that is three HBM round trips over the
+vector (write z, read z, reduce); fused, the updated tile is reduced while it
+is still in VMEM — one read of x and y, one write of z, and a scalar.
+
+Grid = (n / block_n,): each step writes its z tile and adds ``Σ z²`` into a
+(1, 1) accumulator block revisited by every step (TPU grids iterate
+sequentially, so the read-modify-write is well-defined — the
+:mod:`repro.kernels.spmv_ell` idiom).  ``alpha`` rides as a (1, 1) operand so
+the kernel stays trace-compatible with solver loops where it is a traced
+scalar.  Tail padding (x = y = 0) produces z = 0 and adds nothing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _axpy_norm_kernel(alpha_ref, x_ref, y_ref, z_ref, ss_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        ss_ref[...] = jnp.zeros_like(ss_ref)
+
+    z = alpha_ref[0, 0] * x_ref[...] + y_ref[...]
+    z_ref[...] = z
+    ss_ref[0, 0] += jnp.sum(z * z).astype(ss_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def axpy_norm(
+    alpha: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_n: int = 1024,
+    interpret: bool = False,
+):
+    """(z, z·z) with z = alpha*x + y, computed in one pass over the vectors."""
+    n = x.shape[0]
+    block_n = max(min(block_n, n), 1)
+    pn = ((n + block_n - 1) // block_n) * block_n
+    if pn != n:
+        x = jnp.pad(x, (0, pn - n))
+        y = jnp.pad(y, (0, pn - n))
+    alpha2d = jnp.asarray(alpha, x.dtype).reshape(1, 1)
+
+    z, ss = pl.pallas_call(
+        _axpy_norm_kernel,
+        grid=(pn // block_n,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pn,), x.dtype),
+            jax.ShapeDtypeStruct((1, 1), x.dtype),
+        ],
+        interpret=interpret,
+    )(alpha2d, x, y)
+    return z[:n], ss[0, 0]

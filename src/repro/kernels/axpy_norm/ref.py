@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused axpy + squared-norm kernel.
+
+Contract: ``z = alpha * x + y`` and ``ss = z · z`` in one pass.  The oracle is
+the unfused composition — which is also the bitwise definition the registry's
+reference/xla spaces use, so fused-on and fused-off solver paths agree exactly
+in those spaces.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def axpy_norm_ref(alpha, x: jax.Array, y: jax.Array):
+    """(z, z·z) with z = alpha*x + y (1-D vectors)."""
+    z = alpha * x + y
+    return z, jnp.vdot(z, z)

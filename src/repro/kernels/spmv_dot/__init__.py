@@ -1,0 +1,1 @@
+"""Fused SpMV + dot-product kernel family (apply-with-reduction)."""

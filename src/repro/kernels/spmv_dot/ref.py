@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused ELL SpMV + dot kernel.
+
+The contract the Pallas kernel is validated against: ``y = A @ x`` with the
+usual ELL padding convention (col 0 / value 0 contributes nothing) and
+``d = w · y`` accumulated in the same pass.  The oracle computes the two
+results the unfused way — SpMV then vdot — which is also the bitwise
+definition the registry's reference/xla spaces use, so fused-on and fused-off
+solver paths agree exactly in those spaces.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_dot_ell_ref(
+    col_idx: jax.Array, values: jax.Array, x: jax.Array, w: jax.Array
+):
+    """(y, w·y) for ELL-format A given as (col_idx, values) of shape (m, k)."""
+    y = jnp.sum(values * x[col_idx], axis=1)
+    return y, jnp.vdot(w, y)

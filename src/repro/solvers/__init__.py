@@ -22,6 +22,7 @@ from repro.solvers.krylov import (
     FcgSolver,
     GmresSolver,
     KrylovSolver,
+    PipelinedCgSolver,
     bicgstab,
     cg,
     cgs,
@@ -57,6 +58,7 @@ __all__ = [
     "BicgstabSolver",
     "CgsSolver",
     "GmresSolver",
+    "PipelinedCgSolver",
     "IrSolver",
     "ParILU",
     "parilu_factorize",

@@ -46,6 +46,7 @@ __all__ = [
     "BicgstabSolver",
     "CgsSolver",
     "GmresSolver",
+    "PipelinedCgSolver",
 ]
 
 #: a preconditioner argument: a LinOp / callable ``v -> M^{-1} v`` or a kind
@@ -110,11 +111,37 @@ def cg(
     M: Optional[Precond] = None,
     precond_opts: Optional[dict] = None,
     executor=None,
+    fused: Optional[bool] = None,
+    pipeline: bool = False,
 ) -> SolveResult:
-    """Preconditioned conjugate gradient (SPD systems)."""
+    """Preconditioned conjugate gradient (SPD systems).
+
+    ``fused`` selects the apply-with-reduction formulation (SpMV + dot and
+    axpy + norm fused into single kernel launches).  The default ``None``
+    means "use it when the executor advertises the fused ops for this
+    format" — the optional-op capability probe; ``False`` forces the
+    portable unfused loop, ``True`` asks for fusion but still degrades
+    gracefully when the ops are unavailable.  In the reference/xla kernel
+    spaces the fused ops are the literal unfused composition, so both
+    settings are bitwise identical there.
+
+    ``pipeline=True`` runs the communication-avoiding (Ghysels–Vanroose)
+    variant instead: all three recurrence dot products are batched into one
+    reduction per iteration (a single ``psum`` under the distributed
+    context).  Pipelining reassociates the recurrences, so iteration counts
+    may differ by a step or two from classic CG.
+    """
     if getattr(A, "is_distributed", False):
         return _dist_route(cg, A, b, x0, stop=stop, M=M,
-                           precond_opts=precond_opts, executor=executor)
+                           precond_opts=precond_opts, executor=executor,
+                           fused=fused, pipeline=pipeline)
+    if pipeline:
+        return _pipelined_cg(A, b, x0, stop=stop, M=M,
+                             precond_opts=precond_opts, executor=executor)
+    want_fused = True if fused is None else bool(fused)
+    if want_fused and blas.has_fused_ops(A, executor=executor):
+        return _cg_fused(A, b, x0, stop=stop, M=M,
+                         precond_opts=precond_opts, executor=executor)
     op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
@@ -143,6 +170,122 @@ def cg(
 
     state = (x, r, z, p, rz, jnp.int32(0), blas.norm2(r, executor=ex))
     x, r, z, p, rz, k, rnorm = jax.lax.while_loop(cond, body, state)
+    return SolveResult(x, k, rnorm, rnorm <= thresh)
+
+
+def _cg_fused(A, b, x0, *, stop, M, precond_opts, executor):
+    """CG on the fused-reduction ops: 2 reduction launches per iteration.
+
+    Every iteration issues exactly one ``spmv_dot`` (Ap and p·Ap in a single
+    pass over A) and one ``axpy_norm`` (r-update and ‖r‖² in a single pass
+    over the vectors) — versus SpMV + 2 dots + norm as four separate
+    reduction launches in the portable loop.  With the identity
+    preconditioner the ``r·z`` dot *is* the fused ‖r‖², so the loop carries
+    no standalone dot at all.
+    """
+    Aop = as_linop(A)
+    op = lambda v: Aop.apply(v, executor=executor)  # noqa: E731
+    x = jnp.zeros_like(b) if x0 is None else x0
+    Mres = _resolve_precond(A, M, executor, precond_opts)
+    # detect identity BEFORE the lambda wrap _setup applies — with identity M
+    # the fused ‖r‖² doubles as r·z and the loop carries no standalone dot
+    identity_M = Mres is identity_preconditioner
+    if isinstance(Mres, LinOp):
+        Mop = Mres
+        Mfn = lambda v: Mop.apply(v, executor=executor)  # noqa: E731
+    else:
+        Mfn = Mres
+    ex = executor
+    bnorm = blas.norm2(b, executor=ex)
+    thresh = stop.threshold(bnorm)
+
+    r = b - op(x)
+    z = Mfn(r)
+    p = z
+    rz = blas.dot(r, z, executor=ex)
+
+    def cond(state):
+        x, r, z, p, rz, k, rnorm = state
+        return (rnorm > thresh) & (k < stop.max_iters)
+
+    def body(state):
+        x, r, z, p, rz, k, _ = state
+        Ap, pAp = blas.spmv_dot(A, p, executor=ex)
+        alpha = rz / pAp
+        x = blas.axpy(alpha, p, x, executor=ex)
+        r, rr = blas.axpy_norm(-alpha, Ap, r, executor=ex)
+        if identity_M:
+            # z = r and r·z = ‖r‖² — the fused norm doubles as the CG dot
+            z, rz_new = r, rr
+        else:
+            z = Mfn(r)
+            rz_new = blas.dot(r, z, executor=ex)
+        beta = rz_new / rz
+        p = blas.axpy(beta, p, z, executor=ex)
+        return x, r, z, p, rz_new, k + 1, jnp.sqrt(rr.real)
+
+    state = (x, r, z, p, rz, jnp.int32(0), blas.norm2(r, executor=ex))
+    x, r, z, p, rz, k, rnorm = jax.lax.while_loop(cond, body, state)
+    return SolveResult(x, k, rnorm, rnorm <= thresh)
+
+
+def _pipelined_cg(A, b, x0, *, stop, M, precond_opts, executor):
+    """Pipelined (Ghysels–Vanroose) preconditioned CG — one reduction/iteration.
+
+    Classic CG needs two dependent dot products per iteration (``p·Ap``
+    before the updates, ``r·z`` after), each a separate global reduction.
+    The pipelined recurrences carry the auxiliary vectors ``u = M r``,
+    ``w = A u``, ``z/q/s/p`` so that all three scalars (γ = r·u, δ = w·u,
+    ‖r‖²) are computable from the *same* state — one
+    :func:`repro.sparse.ops.dot_batch` call, which under the distributed
+    reduction context is a single fused ``psum`` per iteration.
+
+    The reassociated recurrences change rounding, so iteration counts may
+    drift by ±1–2 versus classic CG; the converged solution is the same to
+    solver tolerance.
+    """
+    op, x, Mfn = _setup(A, b, x0, M, executor, precond_opts)
+    ex = executor
+    bnorm = blas.norm2(b, executor=ex)
+    thresh = stop.threshold(bnorm)
+    dtype = b.dtype
+
+    r = b - op(x)
+    u = Mfn(r)
+    w = op(u)
+    d0 = blas.dot_batch([(r, u), (w, u), (r, r)], executor=ex)
+    gam, delta, rr = d0[0], d0[1], d0[2]
+    zeros = jnp.zeros_like(b)
+    one = jnp.ones((), dtype)
+
+    def cond(state):
+        *_, rr, gam_old, alpha_old, k = state
+        return (jnp.sqrt(rr.real) > thresh) & (k < stop.max_iters)
+
+    def body(state):
+        x, r, u, w, z, q, s, p, gam, delta, rr, gam_old, alpha_old, k = state
+        beta = jnp.where(k == 0, jnp.zeros((), gam.dtype), gam / gam_old)
+        # at k == 0 beta = 0, so the denominator reduces to delta
+        alpha = gam / (delta - beta * gam / alpha_old)
+        mv = Mfn(w)
+        nv = op(mv)
+        z = blas.axpy(beta, z, nv, executor=ex)
+        q = blas.axpy(beta, q, mv, executor=ex)
+        s = blas.axpy(beta, s, w, executor=ex)
+        p = blas.axpy(beta, p, u, executor=ex)
+        x = blas.axpy(alpha, p, x, executor=ex)
+        r = blas.axpy(-alpha, s, r, executor=ex)
+        u = blas.axpy(-alpha, q, u, executor=ex)
+        w = blas.axpy(-alpha, z, w, executor=ex)
+        d = blas.dot_batch([(r, u), (w, u), (r, r)], executor=ex)
+        return (x, r, u, w, z, q, s, p, d[0], d[1], d[2],
+                gam, alpha, k + 1)
+
+    state = (x, r, u, w, zeros, zeros, zeros, zeros,
+             gam, delta, rr, one, one, jnp.int32(0))
+    out = jax.lax.while_loop(cond, body, state)
+    x, rr, k = out[0], out[10], out[13]
+    rnorm = jnp.sqrt(rr.real)
     return SolveResult(x, k, rnorm, rnorm <= thresh)
 
 
@@ -203,11 +346,21 @@ def bicgstab(
     M: Optional[Precond] = None,
     precond_opts: Optional[dict] = None,
     executor=None,
+    fused: Optional[bool] = None,
 ) -> SolveResult:
-    """Preconditioned BiCGSTAB (general nonsymmetric systems)."""
+    """Preconditioned BiCGSTAB (general nonsymmetric systems).
+
+    ``fused`` works as in :func:`cg`: ``None`` probes the executor for the
+    fused apply-with-reduction ops and uses them when available.
+    """
     if getattr(A, "is_distributed", False):
         return _dist_route(bicgstab, A, b, x0, stop=stop, M=M,
-                           precond_opts=precond_opts, executor=executor)
+                           precond_opts=precond_opts, executor=executor,
+                           fused=fused)
+    want_fused = True if fused is None else bool(fused)
+    if want_fused and blas.has_fused_ops(A, executor=executor):
+        return _bicgstab_fused(A, b, x0, stop=stop, M=M,
+                               precond_opts=precond_opts, executor=executor)
     op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
@@ -238,6 +391,48 @@ def bicgstab(
         beta = (rho_new / (rho + eps)) * (alpha / (omega + eps))
         p = r_new + beta * (p - omega * v)
         return x, r_new, p, rho_new, k + 1, blas.norm2(r_new, executor=ex)
+
+    state = (x, r, p, rho, jnp.int32(0), blas.norm2(r, executor=ex))
+    x, r, p, rho, k, rnorm = jax.lax.while_loop(cond, body, state)
+    return SolveResult(x, k, rnorm, rnorm <= thresh)
+
+
+def _bicgstab_fused(A, b, x0, *, stop, M, precond_opts, executor):
+    """BiCGSTAB on the fused ops: both SpMVs carry their follow-up dot
+    (``r̂·v`` and ``s·t``) and the final residual update carries ‖r‖²,
+    collapsing five reduction launches per iteration into three (the ``t·t``
+    and ``r̂·r`` dots remain standalone).  For real dtypes ``s·t`` equals the
+    portable loop's ``t·s`` bitwise, preserving fallback parity."""
+    op, x, M = _setup(A, b, x0, M, executor, precond_opts)
+    ex = executor
+    bnorm = blas.norm2(b, executor=ex)
+    thresh = stop.threshold(bnorm)
+    eps = jnp.asarray(1e-30, b.dtype)
+
+    r = b - op(x)
+    r_hat = r
+    rho = blas.dot(r_hat, r, executor=ex)
+    p = r
+
+    def cond(state):
+        x, r, p, rho, k, rnorm = state
+        return (rnorm > thresh) & (k < stop.max_iters)
+
+    def body(state):
+        x, r, p, rho, k, _ = state
+        p_hat = M(p)
+        v, rhv = blas.spmv_dot(A, p_hat, w=r_hat, executor=ex)
+        alpha = rho / (rhv + eps)
+        s = blas.axpy(-alpha, v, r, executor=ex)
+        s_hat = M(s)
+        t, ts = blas.spmv_dot(A, s_hat, w=s, executor=ex)
+        omega = ts / (blas.dot(t, t, executor=ex) + eps)
+        x = x + alpha * p_hat + omega * s_hat
+        r_new, rr = blas.axpy_norm(-omega, t, s, executor=ex)
+        rho_new = blas.dot(r_hat, r_new, executor=ex)
+        beta = (rho_new / (rho + eps)) * (alpha / (omega + eps))
+        p = r_new + beta * (p - omega * v)
+        return x, r_new, p, rho_new, k + 1, jnp.sqrt(rr.real)
 
     state = (x, r, p, rho, jnp.int32(0), blas.norm2(r, executor=ex))
     x, r, p, rho, k, rnorm = jax.lax.while_loop(cond, body, state)
@@ -476,6 +671,21 @@ class CgSolver(KrylovSolver):
     """Generated CG solver (SPD) as a LinOp."""
 
     _fn = staticmethod(cg)
+
+
+class PipelinedCgSolver(KrylovSolver):
+    """Generated communication-avoiding CG solver as a LinOp.
+
+    ``PipelinedCgSolver(A, stop=...)`` is :class:`CgSolver` with
+    ``pipeline=True`` baked into the generated options: every iteration
+    performs a single batched reduction (one ``psum`` under the distributed
+    context) instead of two dependent dots — the latency-bound regime's
+    solver of choice at scale."""
+
+    _fn = staticmethod(cg)
+
+    def __init__(self, A, **kw):
+        super().__init__(A, pipeline=True, **kw)
 
 
 class FcgSolver(KrylovSolver):

@@ -147,6 +147,60 @@ def test_blas1_conformance(exec_kind, n, seed):
 
 
 @pytest.mark.parametrize("exec_kind", EXEC_KINDS)
+@pytest.mark.parametrize("fmt", ("csr", "ell"))
+@settings(max_examples=6)
+@given(
+    n=st.integers(1, 48),
+    density=st.floats(0.05, 0.8),
+    seed=st.integers(0, 10_000),
+)
+def test_spmv_dot_conformance(fmt, exec_kind, n, density, seed):
+    """The fused SpMV+dot family joins the conformance matrix: every kernel
+    space must return the same (y, w·y) pair as the reference space."""
+    a = _pattern(n, n, density, seed)
+    rng = np.random.default_rng(seed + 3)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    A = BUILD[fmt](a)
+    op = registry.operation(f"spmv_dot_{fmt}")
+    y_ref, d_ref = op(A, x, w, executor=_reference())
+    y_got, d_got = op(A, x, w, executor=make_executor(exec_kind))
+    _assert_conforms(y_got, y_ref, what=f"spmv_dot_{fmt}.y on {exec_kind}", atol=1e-3)
+    _assert_conforms(d_got, d_ref, what=f"spmv_dot_{fmt}.dot on {exec_kind}", atol=1e-2)
+    np.testing.assert_allclose(
+        float(d_ref), float(np.asarray(w) @ (a @ np.asarray(x))),
+        rtol=1e-3, atol=1e-2,
+    )
+
+
+@pytest.mark.parametrize("exec_kind", EXEC_KINDS)
+@settings(max_examples=6)
+@given(n=st.integers(1, 300), seed=st.integers(0, 10_000))
+def test_axpy_norm_conformance(exec_kind, n, seed):
+    """The fused axpy+norm family: (z, ‖z‖²) must conform across spaces for
+    both single vectors and batched (nb, n) operands (the batched solvers
+    dispatch the same operation)."""
+    rng = np.random.default_rng(seed)
+    op = registry.operation("axpy_norm")
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    alpha = jnp.float32(rng.normal())
+    z_ref, ss_ref = op(alpha, x, y, executor=_reference())
+    z_got, ss_got = op(alpha, x, y, executor=make_executor(exec_kind))
+    _assert_conforms(z_got, z_ref, what=f"axpy_norm.z on {exec_kind}", atol=1e-4)
+    _assert_conforms(ss_got, ss_ref, what=f"axpy_norm.ss on {exec_kind}", atol=1e-2)
+    # batched operands ride the same op
+    nb = 3
+    X = jnp.asarray(rng.normal(size=(nb, n)).astype(np.float32))
+    Y = jnp.asarray(rng.normal(size=(nb, n)).astype(np.float32))
+    al = jnp.asarray(rng.normal(size=(nb,)).astype(np.float32))
+    Z_ref, SS_ref = op(al, X, Y, executor=_reference())
+    Z_got, SS_got = op(al, X, Y, executor=make_executor(exec_kind))
+    _assert_conforms(Z_got, Z_ref, what=f"axpy_norm.batch.z on {exec_kind}", atol=1e-4)
+    _assert_conforms(SS_got, SS_ref, what=f"axpy_norm.batch.ss on {exec_kind}", atol=1e-2)
+
+
+@pytest.mark.parametrize("exec_kind", EXEC_KINDS)
 @settings(max_examples=4)
 @given(
     n=st.integers(4, 64),

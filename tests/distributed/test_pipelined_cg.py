@@ -1,0 +1,161 @@
+"""Communication-avoiding (pipelined) CG at 8 shards.
+
+Acceptance pins, per the Ghysels–Vanroose contract:
+
+* exactly ONE ``psum`` per iteration in the lowered loop body (classic
+  distributed CG carries three: p·Ap, r·z, ‖r‖);
+* iteration counts within ±2 of the unfused/unpipelined baseline;
+* solution parity with the single-device direct solve.
+
+The psum count is asserted on the jaxpr of the sharded solve — the only
+level where "one collective per iteration" is a structural property rather
+than a timing observation.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import sparse
+from repro.distributed import DistCsr, DistEll, Partition
+from repro.solvers import krylov
+from repro.solvers.common import Stop
+
+from test_dist_parity import spd_system
+
+DIST_BUILD = {"csr": DistCsr, "ell": DistEll}
+
+
+def _find_while(jaxpr):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "while":
+            return eqn
+        for v in eqn.params.values():
+            sub = getattr(v, "jaxpr", v if hasattr(v, "eqns") else None)
+            if sub is not None:
+                w = _find_while(sub)
+                if w is not None:
+                    return w
+    return None
+
+
+def _count_psums(jaxpr, acc=None):
+    acc = [] if acc is None else acc
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name.startswith("psum"):
+            acc.append(eqn.primitive.name)
+        for v in eqn.params.values():
+            sub = getattr(v, "jaxpr", v if hasattr(v, "eqns") else None)
+            if sub is not None:
+                _count_psums(sub, acc)
+    return acc
+
+
+def _psums_per_iteration(Ad, b, **options):
+    jaxpr = jax.make_jaxpr(
+        lambda bb: krylov.cg(
+            Ad, bb, stop=Stop(max_iters=400, reduction_factor=1e-6), **options
+        ).x
+    )(b)
+    w = _find_while(jaxpr.jaxpr)
+    assert w is not None, "no while loop in lowered solve"
+    return len(_count_psums(w.params["body_jaxpr"].jaxpr))
+
+
+@pytest.mark.parametrize("fmt", ("csr", "ell"))
+def test_pipelined_cg_one_psum_per_iteration(fmt, require_devices):
+    require_devices(8)
+    a, _, b = spd_system()
+    Ad = DIST_BUILD[fmt].from_matrix(
+        sparse.csr_from_dense(a), Partition.uniform(a.shape[0], 8)
+    )
+    bj = jnp.asarray(b)
+    assert _psums_per_iteration(Ad, bj, pipeline=True) == 1
+    # the classic loop needs one collective per dependent reduction
+    assert _psums_per_iteration(Ad, bj, pipeline=False) >= 3
+
+
+def test_pipelined_cg_8shard_parity(require_devices):
+    require_devices(8)
+    a, xtrue, b = spd_system()
+    n = a.shape[0]
+    A = sparse.csr_from_dense(a)
+    stop = Stop(max_iters=500, reduction_factor=1e-6)
+    baseline = krylov.cg(A, jnp.asarray(b), stop=stop, fused=False)
+    Ad = DistCsr.from_matrix(A, Partition.uniform(n, 8))
+    piped = krylov.cg(Ad, jnp.asarray(b), stop=stop, pipeline=True)
+    assert bool(piped.converged)
+    assert abs(int(piped.iterations) - int(baseline.iterations)) <= 2
+    np.testing.assert_allclose(
+        np.asarray(piped.x, np.float64), np.asarray(xtrue, np.float64),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_pipelined_cg_8shard_subprocess(run_with_devices):
+    """Spawn-isolated twin of the acceptance case (runs even when the parent
+    pytest process is locked to one device): 8-shard pipelined CG in f64,
+    one psum per iteration, iterations within ±2 of the unfused baseline."""
+    run_with_devices("""
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        import numpy as np, jax.numpy as jnp
+        from repro import sparse
+        from repro.distributed import DistCsr, Partition
+        from repro.solvers import krylov
+        from repro.solvers.common import Stop
+
+        assert len(jax.devices()) == 8
+        rng = np.random.default_rng(3)
+        n = 96
+        a = np.zeros((n, n))
+        for i in range(n):
+            a[i, i] = 4.0
+            if i > 0:
+                a[i, i - 1] = a[i - 1, i] = -1.0
+            if i > 2:
+                a[i, i - 3] = a[i - 3, i] = -0.5
+        b = a @ rng.normal(size=n)
+        A = sparse.csr_from_dense(a)
+        stop = Stop(max_iters=500, reduction_factor=1e-10)
+        single = krylov.cg(A, jnp.asarray(b), stop=stop, fused=False)
+        Ad = DistCsr.from_matrix(A, Partition.uniform(n, 8))
+        piped = krylov.cg(Ad, jnp.asarray(b), stop=stop, pipeline=True)
+        assert bool(piped.converged)
+        assert abs(int(piped.iterations) - int(single.iterations)) <= 2
+        np.testing.assert_allclose(
+            np.asarray(piped.x), np.asarray(single.x), rtol=1e-8, atol=1e-10
+        )
+
+        def find_while(jaxpr):
+            for eqn in jaxpr.eqns:
+                if eqn.primitive.name == "while":
+                    return eqn
+                for v in eqn.params.values():
+                    sub = getattr(v, "jaxpr", v if hasattr(v, "eqns") else None)
+                    if sub is not None:
+                        w = find_while(sub)
+                        if w is not None:
+                            return w
+            return None
+
+        def count_psums(jaxpr, acc):
+            for eqn in jaxpr.eqns:
+                if eqn.primitive.name.startswith("psum"):
+                    acc.append(eqn.primitive.name)
+                for v in eqn.params.values():
+                    sub = getattr(v, "jaxpr", v if hasattr(v, "eqns") else None)
+                    if sub is not None:
+                        count_psums(sub, acc)
+            return acc
+
+        jaxpr = jax.make_jaxpr(
+            lambda bb: krylov.cg(Ad, bb, stop=stop, pipeline=True).x
+        )(jnp.asarray(b))
+        w = find_while(jaxpr.jaxpr)
+        n_psum = len(count_psums(w.params["body_jaxpr"].jaxpr, []))
+        assert n_psum == 1, f"expected 1 psum/iteration, found {n_psum}"
+        print("PIPELINED DIST CG ACCEPTANCE OK", int(piped.iterations))
+    """)

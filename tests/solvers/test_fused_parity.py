@@ -1,0 +1,172 @@
+"""Fallback-parity contract of the fused Krylov paths.
+
+On the reference/xla kernel spaces the fused ops are the literal unfused
+composition, so ``fused=True`` and ``fused=False`` must be BITWISE identical
+— same iterate sequence, same iteration count, same solution bits.  These
+tests pin that contract plus the launch-count claim (fused CG does its
+per-iteration reduction work in 2 kernel launches, the portable loop in ≥ 5)
+and the capability probe's graceful degradation.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import sparse
+from repro.core.executor import make_executor
+from repro.core.linop import MatrixFreeOp
+from repro.solvers import PipelinedCgSolver, Stop, bicgstab, cg
+from repro.sparse import ops as blas
+
+
+def _spd(n=80, density=0.08, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    d = rng.standard_normal((n, n)) * (rng.random((n, n)) < density)
+    s = (d @ d.T + n * np.eye(n)).astype(dtype)
+    b = rng.standard_normal(n).astype(dtype)
+    return s, b
+
+
+ST = Stop(reduction_factor=1e-8, max_iters=500)
+
+
+@pytest.mark.parametrize("exec_kind", ("reference", "xla"))
+@pytest.mark.parametrize("fmt", ("csr", "ell"))
+def test_cg_fused_off_on_bitwise(exec_kind, fmt):
+    s, b = _spd()
+    build = {"csr": sparse.csr_from_dense, "ell": sparse.ell_from_dense}[fmt]
+    A = build(s)
+    ex = make_executor(exec_kind)
+    on = cg(A, jnp.asarray(b), stop=ST, executor=ex, fused=True)
+    off = cg(A, jnp.asarray(b), stop=ST, executor=ex, fused=False)
+    assert int(on.iterations) == int(off.iterations)
+    assert bool(on.converged) and bool(off.converged)
+    # bitwise, not approximately: the fused ops ARE the unfused composition
+    # in these spaces
+    assert bool(jnp.all(on.x == off.x))
+    np.testing.assert_allclose(
+        np.asarray(on.x, np.float64), np.asarray(off.x, np.float64),
+        rtol=1e-10,
+    )
+
+
+@pytest.mark.parametrize("M", (None, "jacobi"))
+def test_cg_fused_preconditioned_bitwise(M):
+    s, b = _spd(seed=5)
+    A = sparse.csr_from_dense(s)
+    ex = make_executor("xla")
+    on = cg(A, jnp.asarray(b), stop=ST, executor=ex, fused=True, M=M)
+    off = cg(A, jnp.asarray(b), stop=ST, executor=ex, fused=False, M=M)
+    assert int(on.iterations) == int(off.iterations)
+    assert bool(jnp.all(on.x == off.x))
+
+
+def test_bicgstab_fused_off_on_bitwise():
+    rng = np.random.default_rng(7)
+    n = 70
+    a = rng.standard_normal((n, n)) * (rng.random((n, n)) < 0.1)
+    a = (a + n * np.eye(n)).astype(np.float32)  # diagonally dominant
+    b = rng.standard_normal(n).astype(np.float32)
+    A = sparse.csr_from_dense(a)
+    ex = make_executor("xla")
+    on = bicgstab(A, jnp.asarray(b), stop=ST, executor=ex, fused=True)
+    off = bicgstab(A, jnp.asarray(b), stop=ST, executor=ex, fused=False)
+    assert int(on.iterations) == int(off.iterations)
+    assert bool(jnp.all(on.x == off.x))
+
+
+def test_fused_cg_reduction_launch_count():
+    """The perf claim behind the fused path: with identity M, the CG loop
+    body performs its reduction work in exactly 2 op launches (spmv_dot +
+    axpy_norm) where the portable loop needs 5+ (spmv, 2 dots, norm, plus
+    the reduction-free axpys).  ``lax.while_loop`` traces the body once, so
+    dispatch-log deltas over known init counts are per-iteration counts."""
+    s, b = _spd(seed=2)
+    A = sparse.csr_from_dense(s)
+    ex = make_executor("xla")
+    ex.dispatch_log.clear()
+    cg(A, jnp.asarray(b), stop=ST, executor=ex, fused=True)
+    log = dict(ex.dispatch_log)
+    # fused ops appear ONLY in the loop body
+    assert log["spmv_dot_csr"] == 1
+    assert log["axpy_norm"] == 1
+    # with identity M the body carries no standalone dot (init rz is the one)
+    assert log["blas_dot"] == 1
+
+    ex.dispatch_log.clear()
+    cg(A, jnp.asarray(b), stop=ST, executor=ex, fused=False)
+    log = dict(ex.dispatch_log)
+    # init: 1 spmv, 1 dot, 2 norms -> body counts by subtraction
+    body_launches = (
+        (log["spmv_csr"] - 1)
+        + (log["blas_dot"] - 1)
+        + (log["blas_norm2"] - 2)
+        + log["blas_axpy"]
+    )
+    assert body_launches >= 5
+
+
+def test_capability_probe_graceful_fallback():
+    """Matrix-free operators have no fused SpMV: fused=True must degrade to
+    the portable loop (identical result), never raise."""
+    s, b = _spd(seed=3)
+    A = sparse.csr_from_dense(s)
+    ex = make_executor("xla")
+    sj = jnp.asarray(s)
+    free = MatrixFreeOp(lambda v: sj @ v, shape=s.shape, dtype=s.dtype)
+    assert not blas.has_fused_ops(free, executor=ex)
+    assert blas.has_fused_ops(A, executor=ex)
+    got = cg(free, jnp.asarray(b), stop=ST, executor=ex, fused=True)
+    want = cg(free, jnp.asarray(b), stop=ST, executor=ex, fused=False)
+    assert int(got.iterations) == int(want.iterations)
+    assert bool(jnp.all(got.x == want.x))
+
+
+def test_pipelined_cg_matches_classic():
+    """Pipelining reassociates the recurrences — iteration counts may drift
+    by a couple of steps, the solution agrees to solver tolerance.  (The
+    tolerance is the f32-attainable 1e-6: the pipelined recurrence residual
+    stagnates earlier than classic CG's, the known accuracy trade of the
+    method, so tighter stops belong to f64 runs.)"""
+    s, b = _spd(seed=11)
+    A = sparse.csr_from_dense(s)
+    ex = make_executor("xla")
+    st6 = Stop(reduction_factor=1e-6, max_iters=500)
+    classic = cg(A, jnp.asarray(b), stop=st6, executor=ex, fused=False)
+    piped = cg(A, jnp.asarray(b), stop=st6, executor=ex, pipeline=True)
+    assert bool(piped.converged)
+    assert abs(int(piped.iterations) - int(classic.iterations)) <= 2
+    xd = np.linalg.solve(s.astype(np.float64), b.astype(np.float64))
+    np.testing.assert_allclose(np.asarray(piped.x, np.float64), xd,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pipelined_cg_solver_linop():
+    s, b = _spd(seed=13)
+    A = sparse.csr_from_dense(s)
+    ex = make_executor("xla")
+    solver = PipelinedCgSolver(
+        A, stop=Stop(reduction_factor=1e-6, max_iters=500), executor=ex
+    )
+    res = solver.solve(jnp.asarray(b))
+    assert bool(res.converged)
+    # the LinOp face composes like any operator
+    x = solver.apply(jnp.asarray(b))
+    assert bool(jnp.all(x == res.x))
+
+
+def test_pipelined_cg_single_batched_reduction():
+    """One dot_batch (= one fused reduction) per iteration, no standalone
+    dot/norm launches inside the loop body."""
+    s, b = _spd(seed=17)
+    A = sparse.csr_from_dense(s)
+    ex = make_executor("xla")
+    ex.dispatch_log.clear()
+    cg(A, jnp.asarray(b), stop=ST, executor=ex, pipeline=True)
+    log = dict(ex.dispatch_log)
+    # init: norm2(b), dot_batch(3); body trace: dot_batch(3) -> 6 total dots,
+    # and no norm2 dispatch from the body (the stop norm is sqrt of the
+    # batched r·r)
+    assert log["blas_dot"] == 6
+    assert log["blas_norm2"] == 1
