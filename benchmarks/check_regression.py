@@ -12,6 +12,13 @@ when present) and fails on regressions in the ``pinned`` block:
   to the previous snapshot is a regression; improvements and noise inside
   the band pass.
 
+On failure the full per-pin diff table is printed (old vs new vs the
+threshold each pin was held to), and the run always ends with one greppable
+summary line::
+
+    REGRESSION-GATE: PASS (24 pins vs BENCH_pr6.json)
+    REGRESSION-GATE: FAIL (3 regressions in 24 pins vs BENCH_pr6.json)
+
 Exit code 1 on any regression; 0 otherwise (including when no previous
 snapshot exists — the first PR that ships a snapshot establishes the
 baseline).
@@ -47,28 +54,68 @@ def find_previous(current_path: str) -> str | None:
 
 
 def compare(prev: dict, cur: dict) -> list:
-    """Return a list of human-readable regression descriptions."""
-    regressions = []
+    """Diff the pinned blocks; one row per pin.
+
+    Each row is ``{"key", "old", "new", "threshold", "status"}`` where
+    ``status`` is ``"OK"`` or ``"REGRESSION"`` and ``threshold`` states the
+    rule the pin was held to.  Rows for every pin come back (not only the
+    failures) so the gate can print a complete diff table.
+    """
+    rows = []
     prev_pinned = prev.get("pinned", {})
     cur_pinned = cur.get("pinned", {})
     for key, old in sorted(prev_pinned.items()):
         if key not in cur_pinned:
-            regressions.append(f"pinned case {key!r} disappeared")
+            rows.append({
+                "key": key, "old": old, "new": None,
+                "threshold": "must exist", "status": "REGRESSION",
+            })
             continue
         new = cur_pinned[key]
         if isinstance(old, bool):
-            if old and not new:
-                regressions.append(f"{key}: True -> False")
+            bad = old and not new
+            threshold = "no True -> False"
         elif isinstance(old, int):
-            if new > old:
-                regressions.append(f"{key}: {old} -> {new} (count increased)")
+            bad = new > old
+            threshold = f"<= {old}"
         elif isinstance(old, float):
-            if old > 0 and new < old * (1.0 - TOLERANCE):
-                regressions.append(
-                    f"{key}: {old:.4f} -> {new:.4f} "
-                    f"(dropped more than {TOLERANCE:.0%})"
-                )
-    return regressions
+            floor = old * (1.0 - TOLERANCE)
+            bad = old > 0 and new < floor
+            threshold = f">= {floor:.4f} (-{TOLERANCE:.0%})"
+        else:
+            bad, threshold = False, "informational"
+        rows.append({
+            "key": key, "old": old, "new": new,
+            "threshold": threshold,
+            "status": "REGRESSION" if bad else "OK",
+        })
+    return rows
+
+
+def regressions(rows: list) -> list:
+    return [r for r in rows if r["status"] == "REGRESSION"]
+
+
+def render_diff_table(rows: list) -> str:
+    """Aligned old-vs-new-vs-threshold table over every pin."""
+
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.4f}"
+        return "missing" if v is None else str(v)
+
+    table = [("pin", "old", "new", "threshold", "status")]
+    table += [
+        (r["key"], fmt(r["old"]), fmt(r["new"]), r["threshold"], r["status"])
+        for r in rows
+    ]
+    widths = [max(len(row[i]) for row in table) for i in range(5)]
+    lines = []
+    for j, row in enumerate(table):
+        lines.append("  ".join(c.ljust(w) for c, w in zip(row, widths)))
+        if j == 0:
+            lines.append("  ".join("-" * w for w in widths))
+    return "\n".join(lines)
 
 
 def main(argv=None) -> int:
@@ -84,31 +131,37 @@ def main(argv=None) -> int:
         snaps = sorted(glob.glob("BENCH_pr*.json"), key=_pr_number)
         if not snaps:
             print("no BENCH_pr*.json snapshot found — nothing to gate")
+            print("REGRESSION-GATE: PASS (no snapshot)")
             return 0
         current = snaps[-1]
     with open(current) as f:
         cur = json.load(f)
     if cur.get("schema") != "repro-bench/1":
         print(f"{current}: unknown schema {cur.get('schema')!r}")
+        print("REGRESSION-GATE: FAIL (bad schema)")
         return 1
 
     previous = args.previous or find_previous(current)
     if previous is None:
         print(f"{current}: no previous snapshot — baseline established, pass")
+        print("REGRESSION-GATE: PASS (baseline)")
         return 0
     with open(previous) as f:
         prev = json.load(f)
 
-    regressions = compare(prev, cur)
-    if regressions:
+    rows = compare(prev, cur)
+    bad = regressions(rows)
+    prev_name = os.path.basename(previous)
+    if bad:
         print(f"REGRESSIONS vs {previous}:")
-        for r in regressions:
-            print(f"  - {r}")
+        print(render_diff_table(rows))
+        print(
+            f"REGRESSION-GATE: FAIL ({len(bad)} regressions in "
+            f"{len(rows)} pins vs {prev_name})"
+        )
         return 1
-    print(
-        f"{current}: {len(cur.get('pinned', {}))} pinned cases OK "
-        f"vs {previous}"
-    )
+    print(f"{current}: {len(rows)} pinned cases OK vs {previous}")
+    print(f"REGRESSION-GATE: PASS ({len(rows)} pins vs {prev_name})")
     return 0
 
 

@@ -15,8 +15,15 @@ import numpy as np
 import jax
 
 
-def time_fn(fn: Callable, *args, warmup: int = 2, repeats: int = 5) -> float:
-    """Median wall seconds per call (blocking on results)."""
+def time_stats(fn: Callable, *args, warmup: int = 2, repeats: int = 5) -> dict:
+    """Timing statistics for ``fn(*args)``: every repeat blocks on its result.
+
+    Returns a dict with both the median (``time_s`` / ``time_us`` — robust
+    to scheduler noise, what the regression gate pins) and the min-of-k
+    (``min_s`` / ``min_us`` — the least-noisy estimate of achievable speed,
+    what roofline fractions should use), plus the ``warmup``/``repeats``
+    protocol so BENCH snapshots are self-describing.
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -24,7 +31,21 @@ def time_fn(fn: Callable, *args, warmup: int = 2, repeats: int = 5) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+    med = float(np.median(times))
+    best = float(min(times))
+    return {
+        "time_s": med,
+        "min_s": best,
+        "time_us": med * 1e6,
+        "min_us": best * 1e6,
+        "warmup": warmup,
+        "repeats": repeats,
+    }
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, repeats: int = 5) -> float:
+    """Median wall seconds per call (blocking on results)."""
+    return time_stats(fn, *args, warmup=warmup, repeats=repeats)["time_s"]
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

@@ -31,12 +31,12 @@ from benchmarks.common import (
     banded,
     spmv_bandwidth_bound,
     stencil_2d,
-    time_fn,
+    time_stats,
     tridiag,
 )
 
 SCHEMA = "repro-bench/1"
-PR = 6
+PR = 7
 
 
 def _spd(n=96):
@@ -51,9 +51,16 @@ def _spd(n=96):
 
 
 def _spmv_records(bw: float) -> List[dict]:
-    """(op x format x executor) achieved GB/s against the roofline bound."""
+    """(op x format x executor) achieved GB/s against the roofline bound.
+
+    Besides the returned records, every case publishes live gauges to the
+    default metrics registry (``bench_spmv_gbs`` / ``bench_spmv_frac_of_bound``
+    per op x format x executor) so a ``--metrics-jsonl`` run exports the same
+    roofline surface the pinned block snapshots.
+    """
     from repro import sparse
     from repro.core import make_executor, registry
+    from repro.observability import metrics
 
     suite = {
         "stencil2d_16": stencil_2d(16),
@@ -97,19 +104,28 @@ def _spmv_records(bw: float) -> List[dict]:
                         fused_bytes,
                     ),
                 ):
-                    t = time_fn(fn, x)
+                    st = time_stats(fn, x)
+                    t = st["time_s"]  # median: what the pins diff
                     gbs = bytes_moved / t / 1e9
                     gflops = 2 * nnz / t / 1e9
+                    frac = gbs / (bw / 1e9)
+                    labels = dict(op=op_name, format=fmt, executor=ex_name)
+                    metrics.gauge("bench_spmv_gbs", **labels).set(gbs)
+                    metrics.gauge(
+                        "bench_spmv_frac_of_bound", **labels).set(frac)
                     records.append({
                         "kind": "spmv",
                         "op": op_name,
                         "format": fmt,
                         "executor": ex_name,
                         "matrix": mat_name,
-                        "time_us": t * 1e6,
+                        "time_us": st["time_us"],
+                        "min_us": st["min_us"],
+                        "warmup": st["warmup"],
+                        "repeats": st["repeats"],
                         "gbs": gbs,
                         "bound_gbs": bw / 1e9,
-                        "frac_of_bound": gbs / (bw / 1e9),
+                        "frac_of_bound": frac,
                         "gflops": gflops,
                         "bound_gflops": bound / 1e9,
                     })
@@ -139,7 +155,8 @@ def _solver_records() -> tuple:
     ):
         fn = jax.jit(lambda bb, opts=opts: cg(
             A, bb, stop=stop, executor=ex, **opts).x)
-        t = time_fn(fn, b)
+        st = time_stats(fn, b)
+        t = st["time_s"]
         res = cg(A, b, stop=stop, executor=ex, **opts)
         k = int(res.iterations)
         iters[variant] = k
@@ -151,6 +168,9 @@ def _solver_records() -> tuple:
             "iterations": k,
             "converged": bool(res.converged),
             "time_to_tol_s": t,
+            "min_time_to_tol_s": st["min_s"],
+            "warmup": st["warmup"],
+            "repeats": st["repeats"],
             "time_per_iter_us": t / max(k, 1) * 1e6,
         })
 
@@ -203,14 +223,18 @@ def _dist_records() -> tuple:
     for fmt, cls in (("csr", DistCsr), ("ell", DistEll)):
         Ad = cls.from_matrix(sparse.csr_from_dense(a), part)
         fn = jax.jit(lambda xx, Ad=Ad: Ad.apply(xx, executor=ex))
-        t = time_fn(fn, x)
+        st = time_stats(fn, x)
+        t = st["time_s"]
         records.append({
             "kind": "dist_spmv",
             "format": fmt,
             "executor": "xla",
             "parts": parts,
             "matrix": "spd_stencil_96",
-            "time_us": t * 1e6,
+            "time_us": st["time_us"],
+            "min_us": st["min_us"],
+            "warmup": st["warmup"],
+            "repeats": st["repeats"],
             "shard_gbs": shard_bytes(Ad, x.dtype.itemsize) / t / 1e9,
             "gflops": 2 * nnz / t / 1e9,
         })

@@ -52,6 +52,10 @@ def main() -> None:
     ap.add_argument("--bench-json", default=None, metavar="PATH",
                     help="write the schema'd BENCH snapshot (JSON) instead "
                          "of the CSV figures")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="with --bench-json: also export the live metrics "
+                         "registry (achieved GB/s, frac-of-bound gauges) "
+                         "as JSONL")
     args = ap.parse_args()
     small = not args.full
 
@@ -59,6 +63,11 @@ def main() -> None:
         from benchmarks import report
 
         report.write(args.bench_json)
+        if args.metrics_jsonl:
+            from repro.observability import metrics
+
+            metrics.export_jsonl(args.metrics_jsonl)
+            print(f"# metrics -> {args.metrics_jsonl}")
         return
 
     if args.autotune:

@@ -30,6 +30,7 @@ from repro.batch import ops
 from repro.batch.formats import BatchCsr, BatchEll
 from repro.batch.linop import BatchIdentity, BatchLinOp
 from repro.core import registry
+from repro.observability import convergence
 from repro.solvers.common import Stop
 from repro.sparse.ops import _csr_row_ids
 
@@ -61,6 +62,9 @@ class BatchSolveResult:
     iterations: jax.Array
     residual_norms: jax.Array
     converged: jax.Array
+    #: per-iteration residual norms, shape ``(cap, nb)``, when the solve ran
+    #: with ``history=`` (NaN in unfilled slots); None otherwise.
+    history: Optional[jax.Array] = None
 
     @property
     def num_batch(self) -> int:
@@ -250,6 +254,7 @@ def batch_cg(
     M: Optional[Union[Callable, str]] = None,
     precond_opts: Optional[dict] = None,
     executor=None,
+    history=None,
 ) -> BatchSolveResult:
     """Batched preconditioned CG (SPD systems), per-system stopping.
 
@@ -269,13 +274,15 @@ def batch_cg(
     rz = ops.batch_dot(R, Z, executor=ex)
     rnorm = ops.batch_norm2(R, executor=ex)
     iters = jnp.zeros(nb, jnp.int32)
+    hist0 = convergence.init(convergence.capacity(history, stop),
+                             batch=nb, dtype=rnorm.dtype)
 
     def cond(state):
-        *_, k, rnorm = state
+        k, rnorm = state[6], state[7]
         return jnp.any(rnorm > thresh) & (k < stop.max_iters)
 
     def body(state):
-        X, R, Z, P, rz, iters, k, rnorm = state
+        X, R, Z, P, rz, iters, k, rnorm, hist = state
         active = rnorm > thresh  # (nb,)
         a2 = active[:, None]
         AP = _apply(A, P, ex)
@@ -298,11 +305,17 @@ def batch_cg(
         rz = jnp.where(active, rz_new, rz)
         rnorm = jnp.where(active, jnp.sqrt(rr), rnorm)
         iters = iters + active.astype(jnp.int32)
-        return X, R, Z, P, rz, iters, k + 1, rnorm
+        # frozen systems keep re-recording their final norm — the history row
+        # at iteration k is the batch's residual state after k+1 sweeps
+        return (X, R, Z, P, rz, iters, k + 1, rnorm,
+                convergence.push(hist, k, rnorm))
 
-    state = (X, R, Z, P, rz, iters, jnp.int32(0), rnorm)
-    X, R, Z, P, rz, iters, k, rnorm = jax.lax.while_loop(cond, body, state)
-    return BatchSolveResult(X, iters, rnorm, rnorm <= thresh)
+    state = (X, R, Z, P, rz, iters, jnp.int32(0), rnorm, hist0)
+    (X, R, Z, P, rz, iters, k, rnorm, hist) = jax.lax.while_loop(
+        cond, body, state
+    )
+    return BatchSolveResult(X, iters, rnorm, rnorm <= thresh,
+                            convergence.finalize(hist))
 
 
 # =============================================================================
@@ -319,6 +332,7 @@ def batch_bicgstab(
     M: Optional[Union[Callable, str]] = None,
     precond_opts: Optional[dict] = None,
     executor=None,
+    history=None,
 ) -> BatchSolveResult:
     """Batched preconditioned BiCGSTAB (general systems), per-system stopping."""
     ex = executor
@@ -334,13 +348,15 @@ def batch_bicgstab(
     P = R
     rnorm = ops.batch_norm2(R, executor=ex)
     iters = jnp.zeros(nb, jnp.int32)
+    hist0 = convergence.init(convergence.capacity(history, stop),
+                             batch=nb, dtype=rnorm.dtype)
 
     def cond(state):
-        *_, k, rnorm = state
+        k, rnorm = state[5], state[6]
         return jnp.any(rnorm > thresh) & (k < stop.max_iters)
 
     def body(state):
-        X, R, P, rho, iters, k, rnorm = state
+        X, R, P, rho, iters, k, rnorm, hist = state
         active = rnorm > thresh
         a2 = active[:, None]
         P_hat = M(P)
@@ -364,8 +380,10 @@ def batch_bicgstab(
         rho = jnp.where(active, rho_new, rho)
         rnorm = jnp.where(active, jnp.sqrt(rr), rnorm)
         iters = iters + active.astype(jnp.int32)
-        return X, R, P, rho, iters, k + 1, rnorm
+        return (X, R, P, rho, iters, k + 1, rnorm,
+                convergence.push(hist, k, rnorm))
 
-    state = (X, R, P, rho, iters, jnp.int32(0), rnorm)
-    X, R, P, rho, iters, k, rnorm = jax.lax.while_loop(cond, body, state)
-    return BatchSolveResult(X, iters, rnorm, rnorm <= thresh)
+    state = (X, R, P, rho, iters, jnp.int32(0), rnorm, hist0)
+    X, R, P, rho, iters, k, rnorm, hist = jax.lax.while_loop(cond, body, state)
+    return BatchSolveResult(X, iters, rnorm, rnorm <= thresh,
+                            convergence.finalize(hist))

@@ -39,6 +39,7 @@ import jax
 
 from repro.core import params as params_lib
 from repro.core.params import HardwareParams
+from repro.observability.events import DispatchEvent, DispatchLog
 
 __all__ = [
     "Executor",
@@ -70,9 +71,13 @@ class Executor:
         self.hw = hw
         self.strict = strict
         self.device = device
-        #: dispatch telemetry: op name -> count (used by portability tests
-        #: to assert which kernel space actually served a model).
-        self.dispatch_log: Dict[str, int] = collections.Counter()
+        #: dispatch telemetry: Counter face (op name -> count, used by
+        #: portability tests and BENCH launch-count pins) plus a bounded
+        #: deque of structured DispatchEvents filled while tracing is on.
+        self.dispatch_log: DispatchLog = DispatchLog()
+        #: most recent LaunchConfig resolved via :meth:`launch_config`
+        #: (attached to the in-flight dispatch event by the registry).
+        self._last_launch_config = None
 
     # -- identity ----------------------------------------------------------------
     @property
@@ -121,8 +126,15 @@ class Executor:
 
         return operation(op_name)(*args, executor=self, **kwargs)
 
-    def _note_dispatch(self, op_name: str) -> None:
-        self.dispatch_log[op_name] += 1
+    def _note_dispatch(
+        self, op_name: str, event: Optional[DispatchEvent] = None
+    ) -> None:
+        self.dispatch_log.record(op_name, event)
+
+    @property
+    def dispatch_events(self):
+        """Structured dispatch events (only populated while tracing)."""
+        return self.dispatch_log.events
 
     # -- launch configuration (paper: per-architecture kernel parameters) --------
     def launch_config(self, op_name: str, shapes: Dict[str, int]):
@@ -131,7 +143,9 @@ class Executor:
         HardwareParams seed, VMEM-budget checked)."""
         from repro.core import tuning
 
-        return tuning.resolve(op_name, shapes, self.hw)
+        cfg = tuning.resolve(op_name, shapes, self.hw)
+        self._last_launch_config = cfg
+        return cfg
 
     @contextlib.contextmanager
     def activate(self):

@@ -22,7 +22,12 @@ Ginkgo semantics preserved:
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict
+import time
+from typing import Any, Callable, Dict, Tuple
+
+# stdlib-only modules, safe to import before JAX-heavy layers come up
+from repro.observability import events as _events
+from repro.observability import trace as _trace
 
 __all__ = [
     "NotCompiledError",
@@ -72,17 +77,21 @@ class Operation:
 
         return deco
 
-    def implementation_for(self, executor) -> Callable[..., Any]:
+    def resolve(self, executor) -> Tuple[str, Callable[..., Any]]:
+        """``(kernel_space, implementation)`` that will serve ``executor``."""
         spaces = (executor.kernel_space,) if executor.strict else executor.spaces
         for space in spaces:
             impl = self._impls.get(space)
             if impl is not None:
-                return impl
+                return space, impl
         raise NotCompiledError(
             f"operation {self.name!r} has no kernel for executor "
             f"{executor.name!r} (searched spaces {spaces}; "
             f"registered: {sorted(self._impls)})"
         )
+
+    def implementation_for(self, executor) -> Callable[..., Any]:
+        return self.resolve(executor)[1]
 
     def supports(self, executor) -> bool:
         """Does any of the executor's kernel spaces serve this operation?
@@ -108,9 +117,46 @@ class Operation:
         from repro.core.executor import current_executor
 
         ex = executor if executor is not None else current_executor()
-        impl = self.implementation_for(ex)
+        space, impl = self.resolve(ex)
+        if not _trace.TRACING:
+            # hot path: identical to the pre-observability dispatch — one
+            # module-attribute check, no clock read, no allocation.
+            out = impl(ex, *args, **kwargs)
+            ex._note_dispatch(self.name)
+            return out
+        return self._traced_call(ex, space, impl, args, kwargs)
+
+    def _traced_call(self, ex, space, impl, args, kwargs):
+        """Instrumented dispatch: structured event + Chrome trace span.
+
+        Wall time here is dispatch/trace-time cost (under ``jit`` each op
+        runs once while tracing) — the event's value is launch *structure*:
+        op, space, shapes, resolved LaunchConfig, bytes-moved estimate.
+        """
+        tracer = _trace.get_tracer()
+        ex._last_launch_config = None  # repopulated if the kernel resolves one
+        t0 = time.perf_counter()
         out = impl(ex, *args, **kwargs)
-        ex._note_dispatch(self.name)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        ts_us = tracer.rel_us(t0) if tracer is not None else 0.0
+        event = _events.make_event(
+            op=self.name,
+            space=space,
+            executor=ex,
+            launch=ex._last_launch_config,
+            wall_us=wall_us,
+            ts_us=ts_us,
+            operands=args,
+            out=out,
+        )
+        ex._note_dispatch(self.name, event)
+        if tracer is not None:
+            tracer.complete(
+                self.name, ts_us, wall_us, cat="dispatch", args=event.to_args()
+            )
+        from repro.observability import metrics as _metrics
+
+        _metrics.observe_dispatch(event, getattr(ex.hw, "hbm_bandwidth", None))
         return out
 
     def __repr__(self) -> str:

@@ -61,6 +61,10 @@ def dist_solve(
 
     part = A.partition
     Md = dist_preconditioner(A, M, executor=executor, **(precond_opts or {}))
+    # static branch: history changes the shard_map output arity, and the
+    # option value is part of the _JIT_CACHE key, so each setting compiles
+    # its own closure
+    want_history = bool(options.get("history"))
 
     bp = part.pad(b)
     xp = part.pad(x0) if x0 is not None else jnp.zeros_like(bp)
@@ -104,14 +108,22 @@ def dist_solve(
             # scalars pick up a length-1 shard axis so every output can use
             # the same sharded out_spec (their psum'd values agree across
             # shards)
-            return (
+            outs = (
                 res.x[None],
                 res.iterations[None],
                 res.residual_norm[None],
                 res.converged[None],
             )
+            if want_history:
+                # the residual norms the solver recorded are the psum'd
+                # global norms — every shard holds an identical copy
+                outs = outs + (res.history[None],)
+            return outs
 
         vec = P(DATA_AXIS, None)
+        out_specs = (vec, P(DATA_AXIS), P(DATA_AXIS), P(DATA_AXIS))
+        if want_history:
+            out_specs = out_specs + (P(DATA_AXIS, None),)
         fn = jax.jit(
             shard_map(
                 body,
@@ -123,9 +135,11 @@ def dist_solve(
                     vec,
                     vec,
                 ),
-                out_specs=(vec, P(DATA_AXIS), P(DATA_AXIS), P(DATA_AXIS)),
+                out_specs=out_specs,
             )
         )
         _JIT_CACHE[key] = fn
-    xs, iters, rnorm, conv = fn(a_leaves, m_leaves, bp, xp, mask)
-    return SolveResult(part.unpad(xs), iters[0], rnorm[0], conv[0])
+    outs = fn(a_leaves, m_leaves, bp, xp, mask)
+    xs, iters, rnorm, conv = outs[:4]
+    hist = outs[4][0] if want_history else None
+    return SolveResult(part.unpad(xs), iters[0], rnorm[0], conv[0], hist)

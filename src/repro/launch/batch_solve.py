@@ -26,6 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import batch as batch_lib
 from repro.core import make_executor, use_executor
+from repro.observability import trace
 from repro.launch.mesh import compat_make_mesh
 from repro.solvers.common import Stop
 
@@ -128,7 +129,9 @@ def main(argv=None) -> int:
                     help="executor kind or hardware target name")
     ap.add_argument("--max-iters", type=int, default=500)
     ap.add_argument("--tol", type=float, default=1e-6)
+    trace.add_cli_flag(ap)
     args = ap.parse_args(argv)
+    trace.enable_from_args(args)
 
     nb = 64 if args.smoke else args.batch
     n = 48 if args.smoke else args.n
@@ -161,6 +164,8 @@ def main(argv=None) -> int:
     ok = bool(np.asarray(res.converged).all())
     if not ok:
         print("batch_solve: NOT all systems converged")
+    if args.trace and trace.export():
+        print(f"  trace -> {args.trace}")
     return 0 if ok else 1
 
 

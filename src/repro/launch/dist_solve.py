@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro import sparse
 from repro.core import make_executor, use_executor
 from repro.distributed import DistCsr, DistEll, Partition
+from repro.observability import trace
 from repro.solvers import krylov
 from repro.solvers.common import Stop
 
@@ -79,7 +80,9 @@ def main(argv=None) -> int:
                     help="executor kind or hardware target name")
     ap.add_argument("--max-iters", type=int, default=500)
     ap.add_argument("--tol", type=float, default=1e-6)
+    trace.add_cli_flag(ap)
     args = ap.parse_args(argv)
+    trace.enable_from_args(args)
 
     n = 225 if args.smoke else args.n
     ndev = len(jax.devices())
@@ -130,6 +133,8 @@ def main(argv=None) -> int:
     ok = bool(res.converged) and iters_ok and diff < 1e-3
     if not ok:
         print("dist_solve: PARITY FAILURE")
+    if args.trace and trace.export():
+        print(f"  trace -> {args.trace}")
     return 0 if ok else 1
 
 

@@ -26,6 +26,7 @@ Usage:
 """
 
 import argparse
+from repro.observability import trace
 import dataclasses
 import functools
 import json
@@ -351,7 +352,9 @@ def main() -> None:
                     help="also cost the Pallas kernel-contract path (prefill/decode)")
     ap.add_argument("--moe-dispatch", default="gather", choices=("gather", "a2a"))
     ap.add_argument("--tag", default="", help="artifact filename suffix")
+    trace.add_cli_flag(ap)
     args = ap.parse_args()
+    trace.enable_from_args(args)
 
     if args.all:
         failures = []
@@ -374,6 +377,8 @@ def main() -> None:
                  sp=not args.no_sp, capacity=args.capacity, remat=args.remat,
                  moe_dispatch=args.moe_dispatch,
                  flash_cost=args.flash_cost, tag=args.tag)
+    if args.trace and trace.export():
+        print(f"trace -> {args.trace}")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.observability import trace
 from repro.launch import steps as steps_lib
 from repro.models import lm
 
@@ -94,7 +95,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    trace.add_cli_flag(ap)
     args = ap.parse_args()
+    trace.enable_from_args(args)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     serve(
         cfg,
@@ -104,6 +107,8 @@ def main() -> None:
         greedy=args.temperature == 0.0,
         temperature=max(args.temperature, 1e-3),
     )
+    if args.trace and trace.export():
+        print(f"trace -> {args.trace}")
 
 
 if __name__ == "__main__":

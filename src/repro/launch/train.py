@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.observability import trace
 from repro.configs import get_config, get_smoke_config
 from repro.data import DataConfig, DataIterator, entropy_floor
 from repro.distributed import sharding as shd
@@ -151,7 +152,9 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", action="store_true")
+    trace.add_cli_flag(ap)
     args = ap.parse_args()
+    trace.enable_from_args(args)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     handler = PreemptionHandler().install()
@@ -165,6 +168,8 @@ def main() -> None:
         resume=args.resume,
         preemption=handler,
     )
+    if args.trace and trace.export():
+        print(f"trace -> {args.trace}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,91 @@
+"""Jit-safe convergence history: a fixed-capacity residual-norm ring buffer.
+
+Ginkgo's ``gko::log::Convergence`` logger hangs off a stopping-criterion
+factory and records the residual norm each time the criterion is checked.
+The JAX translation has one extra constraint: solver loops are
+``lax.while_loop`` bodies under ``jit``, so the recording structure must be a
+fixed-shape array threaded through the loop carry — no Python-side appends.
+
+The scheme used by every solver in this repo:
+
+* ``cap = capacity(history, stop)`` maps the user-facing ``history=`` option
+  (``None``/``False`` -> 0, ``True`` -> ``stop.max_iters``, ``int`` -> that
+  many slots) to a static buffer size;
+* ``hist = init(cap)`` is a ``(cap,)`` NaN-filled carry (``(cap, nb)`` for
+  batched solves); capacity 0 yields a ``(0,)`` array so the *same* loop body
+  works with history on or off — :func:`push` is a static no-op on size-0
+  buffers, which jit constant-folds away, keeping the disabled path free;
+* the loop body calls ``hist = push(hist, k, rnorm)`` with the 0-based
+  iteration index; when iterations exceed ``cap`` the buffer wraps (ring
+  semantics: the last ``cap`` residuals survive);
+* ``finalize(hist)`` maps the size-0 buffer back to ``None`` for
+  ``SolveResult.history``; unfilled slots stay NaN.
+
+psum-awareness: the distributed path runs solver source unchanged under
+``shard_map`` with all reductions psum'd, so the recorded norms are *global*
+and identical on every shard — ``dist_solve`` returns shard 0's copy.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["capacity", "init", "push", "finalize", "trim"]
+
+
+def capacity(history, stop) -> int:
+    """Static buffer size for a ``history=`` option against a Stop rule."""
+    if history is None or history is False:
+        return 0
+    if history is True:
+        return int(stop.max_iters)
+    cap = int(history)
+    if cap < 0:
+        raise ValueError(f"history capacity must be >= 0, got {cap}")
+    return cap
+
+
+def init(cap: int, *, batch: Optional[int] = None, dtype=jnp.float32):
+    """NaN-filled ring buffer carry: ``(cap,)`` or ``(cap, batch)``."""
+    shape: Tuple[int, ...] = (cap,) if batch is None else (cap, batch)
+    return jnp.full(shape, jnp.nan, dtype=dtype)
+
+
+def push(hist, k, value):
+    """Record ``value`` at iteration ``k`` (traced ok); no-op when disabled.
+
+    The ``cap == 0`` branch is decided on static shape information, so the
+    disabled path adds nothing to the compiled loop body.
+    """
+    cap = hist.shape[0]
+    if cap == 0:
+        return hist
+    return hist.at[jnp.mod(k, cap)].set(
+        jnp.asarray(value, dtype=hist.dtype)
+    )
+
+
+def finalize(hist):
+    """Ring buffer -> ``SolveResult.history`` (``None`` when disabled)."""
+    if hist is None or hist.shape[0] == 0:
+        return None
+    return hist
+
+
+def trim(history, iterations: Optional[int] = None):
+    """Drop unfilled (NaN) slots — host-side convenience for tools/tests.
+
+    ``iterations`` (when known) takes the first that-many entries; otherwise
+    every non-NaN entry is kept.  Returns a host numpy array.
+    """
+    import numpy as np
+
+    if history is None:
+        return None
+    h = np.asarray(history)
+    if iterations is not None:
+        return h[: min(int(iterations), h.shape[0])]
+    mask = ~np.isnan(h if h.ndim == 1 else h[:, 0])
+    return h[mask]

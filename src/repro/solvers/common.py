@@ -82,6 +82,10 @@ class SolveResult:
     iterations: jax.Array  # int32
     residual_norm: jax.Array
     converged: jax.Array  # bool
+    #: per-iteration residual norms when the solve ran with ``history=``
+    #: (a fixed-capacity ring buffer, NaN in unfilled slots — see
+    #: :mod:`repro.observability.convergence`); None otherwise.
+    history: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass(frozen=True)

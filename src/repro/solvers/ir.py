@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.linop import LinOp, ScaledIdentity, as_linop
+from repro.observability import convergence
 from repro.solvers.common import MatrixLike, SolveResult, Stop
 from repro.solvers.krylov import CgSolver
 from repro.sparse import ops as blas
@@ -48,6 +49,7 @@ def ir(
     inner_dtype=None,
     relaxation: float = 1.0,
     executor=None,
+    history=None,
 ) -> SolveResult:
     """Iterative-refinement / Richardson outer loop.
 
@@ -79,19 +81,24 @@ def ir(
     # the residual rides in the loop state: one full-precision apply per
     # sweep (A.apply(-1.0, x, 1.0, b) — the advanced-apply residual form)
     def cond(state):
-        x, r, k, rnorm = state
+        x, r, k, rnorm, hist = state
         return (rnorm > thresh) & (k < stop.max_iters)
 
     def body(state):
-        x, r, k, _ = state
+        x, r, k, _, hist = state
         x = x + correction(r)
         r = Aop.apply(-1.0, x, 1.0, b, executor=ex)
-        return x, r, k + 1, blas.norm2(r, executor=ex)
+        rnorm = blas.norm2(r, executor=ex)
+        return x, r, k + 1, rnorm, convergence.push(hist, k, rnorm)
 
     r0 = Aop.apply(-1.0, x, 1.0, b, executor=ex)
-    state = (x, r0, jnp.int32(0), blas.norm2(r0, executor=ex))
-    x, r, k, rnorm = jax.lax.while_loop(cond, body, state)
-    return SolveResult(x, k, rnorm, rnorm <= thresh)
+    rnorm0 = blas.norm2(r0, executor=ex)
+    hist0 = convergence.init(convergence.capacity(history, stop),
+                             dtype=rnorm0.dtype)
+    state = (x, r0, jnp.int32(0), rnorm0, hist0)
+    x, r, k, rnorm, hist = jax.lax.while_loop(cond, body, state)
+    return SolveResult(x, k, rnorm, rnorm <= thresh,
+                       convergence.finalize(hist))
 
 
 def mixed_precision_ir(
@@ -105,6 +112,7 @@ def mixed_precision_ir(
     inner_stop: Optional[Stop] = None,
     inner_opts: Optional[dict] = None,
     executor=None,
+    history=None,
 ) -> SolveResult:
     """Mixed-precision IR: a reduced-precision inner Krylov solve under a
     full-precision outer residual.
@@ -141,6 +149,7 @@ def mixed_precision_ir(
         inner=inner,
         inner_dtype=inner_dtype,
         executor=executor,
+        history=history,
     )
 
 
@@ -160,6 +169,7 @@ class IrSolver(LinOp):
         inner_dtype=None,
         relaxation: float = 1.0,
         executor=None,
+        history=None,
     ):
         self.A = as_linop(A)
         self.stop = stop
@@ -167,6 +177,7 @@ class IrSolver(LinOp):
         self.inner_dtype = inner_dtype
         self.relaxation = relaxation
         self.executor = executor
+        self.history = history
 
     @property
     def shape(self):
@@ -187,6 +198,7 @@ class IrSolver(LinOp):
             inner_dtype=self.inner_dtype,
             relaxation=self.relaxation,
             executor=ex,
+            history=self.history,
         )
 
     def _apply(self, b: jax.Array, executor) -> jax.Array:

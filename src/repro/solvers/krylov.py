@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.linop import LinOp, as_linop
+from repro.observability import convergence
 from repro.solvers.common import (
     MatrixLike,
     SolveResult,
@@ -113,8 +114,14 @@ def cg(
     executor=None,
     fused: Optional[bool] = None,
     pipeline: bool = False,
+    history=None,
 ) -> SolveResult:
     """Preconditioned conjugate gradient (SPD systems).
+
+    ``history=True`` (or an int capacity) records per-iteration residual
+    norms into a jit-safe ring buffer surfaced as ``SolveResult.history``
+    (see :mod:`repro.observability.convergence`); the default ``None`` adds
+    nothing to the compiled loop.
 
     ``fused`` selects the apply-with-reduction formulation (SpMV + dot and
     axpy + norm fused into single kernel launches).  The default ``None``
@@ -134,14 +141,16 @@ def cg(
     if getattr(A, "is_distributed", False):
         return _dist_route(cg, A, b, x0, stop=stop, M=M,
                            precond_opts=precond_opts, executor=executor,
-                           fused=fused, pipeline=pipeline)
+                           fused=fused, pipeline=pipeline, history=history)
     if pipeline:
         return _pipelined_cg(A, b, x0, stop=stop, M=M,
-                             precond_opts=precond_opts, executor=executor)
+                             precond_opts=precond_opts, executor=executor,
+                             history=history)
     want_fused = True if fused is None else bool(fused)
     if want_fused and blas.has_fused_ops(A, executor=executor):
         return _cg_fused(A, b, x0, stop=stop, M=M,
-                         precond_opts=precond_opts, executor=executor)
+                         precond_opts=precond_opts, executor=executor,
+                         history=history)
     op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
@@ -151,13 +160,16 @@ def cg(
     z = M(r)
     p = z
     rz = blas.dot(r, z, executor=ex)
+    rnorm0 = blas.norm2(r, executor=ex)
+    hist0 = convergence.init(convergence.capacity(history, stop),
+                             dtype=rnorm0.dtype)
 
     def cond(state):
-        x, r, z, p, rz, k, rnorm = state
+        x, r, z, p, rz, k, rnorm, hist = state
         return (rnorm > thresh) & (k < stop.max_iters)
 
     def body(state):
-        x, r, z, p, rz, k, _ = state
+        x, r, z, p, rz, k, _, hist = state
         Ap = op(p)
         alpha = rz / blas.dot(p, Ap, executor=ex)
         x = blas.axpy(alpha, p, x, executor=ex)
@@ -166,14 +178,17 @@ def cg(
         rz_new = blas.dot(r, z, executor=ex)
         beta = rz_new / rz
         p = blas.axpy(beta, p, z, executor=ex)
-        return x, r, z, p, rz_new, k + 1, blas.norm2(r, executor=ex)
+        rnorm = blas.norm2(r, executor=ex)
+        return (x, r, z, p, rz_new, k + 1, rnorm,
+                convergence.push(hist, k, rnorm))
 
-    state = (x, r, z, p, rz, jnp.int32(0), blas.norm2(r, executor=ex))
-    x, r, z, p, rz, k, rnorm = jax.lax.while_loop(cond, body, state)
-    return SolveResult(x, k, rnorm, rnorm <= thresh)
+    state = (x, r, z, p, rz, jnp.int32(0), rnorm0, hist0)
+    x, r, z, p, rz, k, rnorm, hist = jax.lax.while_loop(cond, body, state)
+    return SolveResult(x, k, rnorm, rnorm <= thresh,
+                       convergence.finalize(hist))
 
 
-def _cg_fused(A, b, x0, *, stop, M, precond_opts, executor):
+def _cg_fused(A, b, x0, *, stop, M, precond_opts, executor, history=None):
     """CG on the fused-reduction ops: 2 reduction launches per iteration.
 
     Every iteration issues exactly one ``spmv_dot`` (Ap and p·Ap in a single
@@ -203,13 +218,16 @@ def _cg_fused(A, b, x0, *, stop, M, precond_opts, executor):
     z = Mfn(r)
     p = z
     rz = blas.dot(r, z, executor=ex)
+    rnorm0 = blas.norm2(r, executor=ex)
+    hist0 = convergence.init(convergence.capacity(history, stop),
+                             dtype=rnorm0.dtype)
 
     def cond(state):
-        x, r, z, p, rz, k, rnorm = state
+        x, r, z, p, rz, k, rnorm, hist = state
         return (rnorm > thresh) & (k < stop.max_iters)
 
     def body(state):
-        x, r, z, p, rz, k, _ = state
+        x, r, z, p, rz, k, _, hist = state
         Ap, pAp = blas.spmv_dot(A, p, executor=ex)
         alpha = rz / pAp
         x = blas.axpy(alpha, p, x, executor=ex)
@@ -222,14 +240,17 @@ def _cg_fused(A, b, x0, *, stop, M, precond_opts, executor):
             rz_new = blas.dot(r, z, executor=ex)
         beta = rz_new / rz
         p = blas.axpy(beta, p, z, executor=ex)
-        return x, r, z, p, rz_new, k + 1, jnp.sqrt(rr.real)
+        rnorm = jnp.sqrt(rr.real)
+        return (x, r, z, p, rz_new, k + 1, rnorm,
+                convergence.push(hist, k, rnorm))
 
-    state = (x, r, z, p, rz, jnp.int32(0), blas.norm2(r, executor=ex))
-    x, r, z, p, rz, k, rnorm = jax.lax.while_loop(cond, body, state)
-    return SolveResult(x, k, rnorm, rnorm <= thresh)
+    state = (x, r, z, p, rz, jnp.int32(0), rnorm0, hist0)
+    x, r, z, p, rz, k, rnorm, hist = jax.lax.while_loop(cond, body, state)
+    return SolveResult(x, k, rnorm, rnorm <= thresh,
+                       convergence.finalize(hist))
 
 
-def _pipelined_cg(A, b, x0, *, stop, M, precond_opts, executor):
+def _pipelined_cg(A, b, x0, *, stop, M, precond_opts, executor, history=None):
     """Pipelined (Ghysels–Vanroose) preconditioned CG — one reduction/iteration.
 
     Classic CG needs two dependent dot products per iteration (``p·Ap``
@@ -257,13 +278,16 @@ def _pipelined_cg(A, b, x0, *, stop, M, precond_opts, executor):
     gam, delta, rr = d0[0], d0[1], d0[2]
     zeros = jnp.zeros_like(b)
     one = jnp.ones((), dtype)
+    hist0 = convergence.init(convergence.capacity(history, stop),
+                             dtype=jnp.sqrt(rr.real).dtype)
 
     def cond(state):
-        *_, rr, gam_old, alpha_old, k = state
+        rr, k = state[10], state[13]
         return (jnp.sqrt(rr.real) > thresh) & (k < stop.max_iters)
 
     def body(state):
-        x, r, u, w, z, q, s, p, gam, delta, rr, gam_old, alpha_old, k = state
+        (x, r, u, w, z, q, s, p, gam, delta, rr,
+         gam_old, alpha_old, k, hist) = state
         beta = jnp.where(k == 0, jnp.zeros((), gam.dtype), gam / gam_old)
         # at k == 0 beta = 0, so the denominator reduces to delta
         alpha = gam / (delta - beta * gam / alpha_old)
@@ -278,15 +302,17 @@ def _pipelined_cg(A, b, x0, *, stop, M, precond_opts, executor):
         u = blas.axpy(-alpha, q, u, executor=ex)
         w = blas.axpy(-alpha, z, w, executor=ex)
         d = blas.dot_batch([(r, u), (w, u), (r, r)], executor=ex)
+        hist = convergence.push(hist, k, jnp.sqrt(d[2].real))
         return (x, r, u, w, z, q, s, p, d[0], d[1], d[2],
-                gam, alpha, k + 1)
+                gam, alpha, k + 1, hist)
 
     state = (x, r, u, w, zeros, zeros, zeros, zeros,
-             gam, delta, rr, one, one, jnp.int32(0))
+             gam, delta, rr, one, one, jnp.int32(0), hist0)
     out = jax.lax.while_loop(cond, body, state)
     x, rr, k = out[0], out[10], out[13]
     rnorm = jnp.sqrt(rr.real)
-    return SolveResult(x, k, rnorm, rnorm <= thresh)
+    return SolveResult(x, k, rnorm, rnorm <= thresh,
+                       convergence.finalize(out[14]))
 
 
 def fcg(
@@ -298,12 +324,14 @@ def fcg(
     M: Optional[Precond] = None,
     precond_opts: Optional[dict] = None,
     executor=None,
+    history=None,
 ) -> SolveResult:
     """Flexible CG (Ginkgo's FCG): Polak–Ribière beta = r'(r - r_prev)/rz_prev,
     robust to non-constant preconditioners."""
     if getattr(A, "is_distributed", False):
         return _dist_route(fcg, A, b, x0, stop=stop, M=M,
-                           precond_opts=precond_opts, executor=executor)
+                           precond_opts=precond_opts, executor=executor,
+                           history=history)
     op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
@@ -313,13 +341,16 @@ def fcg(
     z = M(r)
     p = z
     rz = blas.dot(r, z, executor=ex)
+    rnorm0 = blas.norm2(r, executor=ex)
+    hist0 = convergence.init(convergence.capacity(history, stop),
+                             dtype=rnorm0.dtype)
 
     def cond(state):
-        *_, k, rnorm = state
+        k, rnorm = state[6], state[7]
         return (rnorm > thresh) & (k < stop.max_iters)
 
     def body(state):
-        x, r, r_prev, z, p, rz, k, _ = state
+        x, r, r_prev, z, p, rz, k, _, hist = state
         Ap = op(p)
         alpha = rz / blas.dot(p, Ap, executor=ex)
         x = blas.axpy(alpha, p, x, executor=ex)
@@ -329,12 +360,15 @@ def fcg(
         rz_new = blas.dot(r_new, z, executor=ex)
         beta = blas.dot(z, r_new - r, executor=ex) / rz
         p = blas.axpy(beta, p, z, executor=ex)
-        return x, r_new, r, z, p, rz_new, k + 1, blas.norm2(r_new, executor=ex)
+        rnorm = blas.norm2(r_new, executor=ex)
+        return (x, r_new, r, z, p, rz_new, k + 1, rnorm,
+                convergence.push(hist, k, rnorm))
 
-    state = (x, r, r, z, p, rz, jnp.int32(0), blas.norm2(r, executor=ex))
+    state = (x, r, r, z, p, rz, jnp.int32(0), rnorm0, hist0)
     out = jax.lax.while_loop(cond, body, state)
-    x, r, r_prev, z, p, rz, k, rnorm = out
-    return SolveResult(x, k, rnorm, rnorm <= thresh)
+    x, r, r_prev, z, p, rz, k, rnorm, hist = out
+    return SolveResult(x, k, rnorm, rnorm <= thresh,
+                       convergence.finalize(hist))
 
 
 def bicgstab(
@@ -347,6 +381,7 @@ def bicgstab(
     precond_opts: Optional[dict] = None,
     executor=None,
     fused: Optional[bool] = None,
+    history=None,
 ) -> SolveResult:
     """Preconditioned BiCGSTAB (general nonsymmetric systems).
 
@@ -356,11 +391,12 @@ def bicgstab(
     if getattr(A, "is_distributed", False):
         return _dist_route(bicgstab, A, b, x0, stop=stop, M=M,
                            precond_opts=precond_opts, executor=executor,
-                           fused=fused)
+                           fused=fused, history=history)
     want_fused = True if fused is None else bool(fused)
     if want_fused and blas.has_fused_ops(A, executor=executor):
         return _bicgstab_fused(A, b, x0, stop=stop, M=M,
-                               precond_opts=precond_opts, executor=executor)
+                               precond_opts=precond_opts, executor=executor,
+                               history=history)
     op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
@@ -371,13 +407,16 @@ def bicgstab(
     r_hat = r
     rho = blas.dot(r_hat, r, executor=ex)
     p = r
+    rnorm0 = blas.norm2(r, executor=ex)
+    hist0 = convergence.init(convergence.capacity(history, stop),
+                             dtype=rnorm0.dtype)
 
     def cond(state):
-        x, r, p, rho, k, rnorm = state
+        x, r, p, rho, k, rnorm, hist = state
         return (rnorm > thresh) & (k < stop.max_iters)
 
     def body(state):
-        x, r, p, rho, k, _ = state
+        x, r, p, rho, k, _, hist = state
         p_hat = M(p)
         v = op(p_hat)
         alpha = rho / (blas.dot(r_hat, v, executor=ex) + eps)
@@ -390,14 +429,18 @@ def bicgstab(
         rho_new = blas.dot(r_hat, r_new, executor=ex)
         beta = (rho_new / (rho + eps)) * (alpha / (omega + eps))
         p = r_new + beta * (p - omega * v)
-        return x, r_new, p, rho_new, k + 1, blas.norm2(r_new, executor=ex)
+        rnorm = blas.norm2(r_new, executor=ex)
+        return (x, r_new, p, rho_new, k + 1, rnorm,
+                convergence.push(hist, k, rnorm))
 
-    state = (x, r, p, rho, jnp.int32(0), blas.norm2(r, executor=ex))
-    x, r, p, rho, k, rnorm = jax.lax.while_loop(cond, body, state)
-    return SolveResult(x, k, rnorm, rnorm <= thresh)
+    state = (x, r, p, rho, jnp.int32(0), rnorm0, hist0)
+    x, r, p, rho, k, rnorm, hist = jax.lax.while_loop(cond, body, state)
+    return SolveResult(x, k, rnorm, rnorm <= thresh,
+                       convergence.finalize(hist))
 
 
-def _bicgstab_fused(A, b, x0, *, stop, M, precond_opts, executor):
+def _bicgstab_fused(A, b, x0, *, stop, M, precond_opts, executor,
+                    history=None):
     """BiCGSTAB on the fused ops: both SpMVs carry their follow-up dot
     (``r̂·v`` and ``s·t``) and the final residual update carries ‖r‖²,
     collapsing five reduction launches per iteration into three (the ``t·t``
@@ -413,13 +456,16 @@ def _bicgstab_fused(A, b, x0, *, stop, M, precond_opts, executor):
     r_hat = r
     rho = blas.dot(r_hat, r, executor=ex)
     p = r
+    rnorm0 = blas.norm2(r, executor=ex)
+    hist0 = convergence.init(convergence.capacity(history, stop),
+                             dtype=rnorm0.dtype)
 
     def cond(state):
-        x, r, p, rho, k, rnorm = state
+        x, r, p, rho, k, rnorm, hist = state
         return (rnorm > thresh) & (k < stop.max_iters)
 
     def body(state):
-        x, r, p, rho, k, _ = state
+        x, r, p, rho, k, _, hist = state
         p_hat = M(p)
         v, rhv = blas.spmv_dot(A, p_hat, w=r_hat, executor=ex)
         alpha = rho / (rhv + eps)
@@ -432,11 +478,14 @@ def _bicgstab_fused(A, b, x0, *, stop, M, precond_opts, executor):
         rho_new = blas.dot(r_hat, r_new, executor=ex)
         beta = (rho_new / (rho + eps)) * (alpha / (omega + eps))
         p = r_new + beta * (p - omega * v)
-        return x, r_new, p, rho_new, k + 1, jnp.sqrt(rr.real)
+        rnorm = jnp.sqrt(rr.real)
+        return (x, r_new, p, rho_new, k + 1, rnorm,
+                convergence.push(hist, k, rnorm))
 
-    state = (x, r, p, rho, jnp.int32(0), blas.norm2(r, executor=ex))
-    x, r, p, rho, k, rnorm = jax.lax.while_loop(cond, body, state)
-    return SolveResult(x, k, rnorm, rnorm <= thresh)
+    state = (x, r, p, rho, jnp.int32(0), rnorm0, hist0)
+    x, r, p, rho, k, rnorm, hist = jax.lax.while_loop(cond, body, state)
+    return SolveResult(x, k, rnorm, rnorm <= thresh,
+                       convergence.finalize(hist))
 
 
 def cgs(
@@ -448,12 +497,14 @@ def cgs(
     M: Optional[Precond] = None,
     precond_opts: Optional[dict] = None,
     executor=None,
+    history=None,
 ) -> SolveResult:
     """Conjugate Gradient Squared (Sonneveld) — the paper's solver set's
     transpose-free nonsymmetric method."""
     if getattr(A, "is_distributed", False):
         return _dist_route(cgs, A, b, x0, stop=stop, M=M,
-                           precond_opts=precond_opts, executor=executor)
+                           precond_opts=precond_opts, executor=executor,
+                           history=history)
     op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
@@ -465,13 +516,16 @@ def cgs(
     rho = blas.dot(r_hat, r, executor=ex)
     u = r
     p = r
+    rnorm0 = blas.norm2(r, executor=ex)
+    hist0 = convergence.init(convergence.capacity(history, stop),
+                             dtype=rnorm0.dtype)
 
     def cond(state):
-        *_, k, rnorm = state
+        k, rnorm = state[5], state[6]
         return (rnorm > thresh) & (k < stop.max_iters)
 
     def body(state):
-        x, r, u, p, rho, k, _ = state
+        x, r, u, p, rho, k, _, hist = state
         p_hat = M(p)
         v = op(p_hat)
         alpha = rho / (blas.dot(r_hat, v, executor=ex) + eps)
@@ -483,11 +537,14 @@ def cgs(
         beta = rho_new / (rho + eps)
         u = r + beta * q
         p = u + beta * (q + beta * p)
-        return x, r, u, p, rho_new, k + 1, blas.norm2(r, executor=ex)
+        rnorm = blas.norm2(r, executor=ex)
+        return (x, r, u, p, rho_new, k + 1, rnorm,
+                convergence.push(hist, k, rnorm))
 
-    state = (x, r, u, p, rho, jnp.int32(0), blas.norm2(r, executor=ex))
-    x, r, u, p, rho, k, rnorm = jax.lax.while_loop(cond, body, state)
-    return SolveResult(x, k, rnorm, rnorm <= thresh)
+    state = (x, r, u, p, rho, jnp.int32(0), rnorm0, hist0)
+    x, r, u, p, rho, k, rnorm, hist = jax.lax.while_loop(cond, body, state)
+    return SolveResult(x, k, rnorm, rnorm <= thresh,
+                       convergence.finalize(hist))
 
 
 def gmres(
@@ -500,16 +557,21 @@ def gmres(
     M: Optional[Precond] = None,
     precond_opts: Optional[dict] = None,
     executor=None,
+    history=None,
 ) -> SolveResult:
     """Restarted GMRES(m) with modified Gram-Schmidt Arnoldi + Givens rotations.
 
     Right-preconditioned: solves A M^{-1} u = b, x = M^{-1} u, so the true
     residual is available without extra applies.
+
+    ``history=`` records the true residual norm once per restart *cycle*
+    (slot ``k // m``), not per inner Arnoldi step — the inner steps only
+    track the rotated-rhs estimate.
     """
     if getattr(A, "is_distributed", False):
         return _dist_route(gmres, A, b, x0, stop=stop, M=M,
                            precond_opts=precond_opts, executor=executor,
-                           restart=restart)
+                           restart=restart, history=history)
     op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     n = b.shape[0]
@@ -588,17 +650,22 @@ def gmres(
         return x_new, rnorm
 
     def cond(state):
-        x, k, rnorm = state
+        x, k, rnorm, hist = state
         return (rnorm > thresh) & (k < stop.max_iters)
 
     def body(state):
-        x, k, _ = state
+        x, k, _, hist = state
         x, rnorm = arnoldi_cycle(x)
-        return x, k + m, rnorm
+        return x, k + m, rnorm, convergence.push(hist, k // m, rnorm)
 
     r0 = blas.norm2(b - op(x), executor=ex)
-    x, k, rnorm = jax.lax.while_loop(cond, body, (x, jnp.int32(0), r0))
-    return SolveResult(x, k, rnorm, rnorm <= thresh)
+    hist0 = convergence.init(convergence.capacity(history, stop),
+                             dtype=r0.dtype)
+    x, k, rnorm, hist = jax.lax.while_loop(
+        cond, body, (x, jnp.int32(0), r0, hist0)
+    )
+    return SolveResult(x, k, rnorm, rnorm <= thresh,
+                       convergence.finalize(hist))
 
 
 # =============================================================================

@@ -315,3 +315,143 @@ def test_executor_reports_expected_space(exec_kind):
         "pallas_interpret": "pallas",
     }[exec_kind]
     assert op.space_used(ex) == expected
+
+
+# =============================================================================
+# observability conformance: every op axis must emit well-formed trace events
+# =============================================================================
+
+from repro.observability import trace as trace_mod  # noqa: E402
+
+
+def _axis_spmv(ex):
+    a = _pattern(12, 12, 0.4, 7)
+    sparse.apply(BUILD["csr"](a), jnp.ones(12, jnp.float32), executor=ex)
+    return {"spmv_csr"}
+
+
+def _axis_to_dense(ex):
+    sparse.to_dense(BUILD["ell"](_pattern(10, 10, 0.4, 8)), executor=ex)
+    return {"sparse_to_dense"}
+
+
+def _axis_blas1(ex):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=16).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=16).astype(np.float32))
+    al = jnp.float32(0.5)
+    registry.operation("blas_dot")(x, y, executor=ex)
+    registry.operation("blas_axpy")(al, x, y, executor=ex)
+    registry.operation("blas_scal")(al, x, executor=ex)
+    registry.operation("blas_norm2")(x, executor=ex)
+    return {"blas_dot", "blas_axpy", "blas_scal", "blas_norm2"}
+
+
+def _axis_spmv_dot(ex):
+    a = _pattern(12, 12, 0.4, 9)
+    x = jnp.ones(12, jnp.float32)
+    registry.operation("spmv_dot_csr")(BUILD["csr"](a), x, x, executor=ex)
+    return {"spmv_dot_csr"}
+
+
+def _axis_axpy_norm(ex):
+    x = jnp.ones(16, jnp.float32)
+    registry.operation("axpy_norm")(jnp.float32(0.5), x, x, executor=ex)
+    return {"axpy_norm"}
+
+
+def _axis_block_jacobi(ex):
+    rng = np.random.default_rng(6)
+    inv = jnp.asarray(rng.normal(size=(4, 4, 4)).astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))
+    registry.operation("block_jacobi_apply")(inv, vp, executor=ex)
+    return {"block_jacobi_apply"}
+
+
+def _axis_linop_apply(ex):
+    n = 12
+    a = _pattern(n, n, 0.4, 11)
+    A = BUILD["csr"](a)
+    op, _ = _LINOP_CASES["sum_shift"](A, a, n)
+    op.apply(jnp.ones(n, jnp.float32), executor=ex)
+    return {"spmv_csr"}  # the composed operator dispatches its leaves
+
+
+_TRACE_AXES = {
+    "spmv": _axis_spmv,
+    "to_dense": _axis_to_dense,
+    "blas1": _axis_blas1,
+    "spmv_dot": _axis_spmv_dot,
+    "axpy_norm": _axis_axpy_norm,
+    "block_jacobi_apply": _axis_block_jacobi,
+    "linop_apply": _axis_linop_apply,
+}
+
+
+@pytest.mark.parametrize("exec_kind", EXEC_KINDS)
+@pytest.mark.parametrize("axis", sorted(_TRACE_AXES))
+def test_dispatch_trace_conformance(axis, exec_kind):
+    """Every conformance op axis must emit a well-formed dispatch event on
+    every executor while tracing: correct op name, the space the dispatch
+    actually resolved to, operand shapes, and a schema-valid Chrome event."""
+    ex = make_executor(exec_kind)
+    trace_mod.reset()
+    tracer = trace_mod.enable()
+    try:
+        ex.dispatch_log.clear()
+        expected = _TRACE_AXES[axis](ex)
+        events = list(ex.dispatch_log.events)
+        data = tracer.to_json()
+    finally:
+        trace_mod.reset()
+
+    got_ops = {e.op for e in events}
+    assert expected <= got_ops, (
+        f"{axis} on {exec_kind}: expected dispatch events for {expected}, "
+        f"got {got_ops}"
+    )
+    by_op = {e.op: e for e in events}
+    for e in events:
+        space, _ = registry.operation(e.op).resolve(ex)
+        assert e.space == space, f"{e.op}: event space {e.space} != {space}"
+        assert e.executor == type(ex).__name__
+        assert e.target == ex.hw.name
+        assert isinstance(e.shapes, tuple)
+        assert all(
+            isinstance(s, tuple) and all(isinstance(d, int) for d in s)
+            for s in e.shapes
+        ), f"{e.op}: malformed shapes {e.shapes!r}"
+        assert e.shape_bucket >= 1 and (e.shape_bucket & (e.shape_bucket - 1)) == 0
+        assert e.wall_us >= 0.0 and e.est_bytes >= 0
+        assert isinstance(e.to_args(), dict)
+    for name in expected:
+        assert by_op[name].shapes, f"{name}: no operand shapes recorded"
+
+    # the Chrome stream carries the same dispatches and passes the CI schema
+    assert trace_mod.validate_trace(data) == []
+    chrome_ops = {
+        ev["name"] for ev in data["traceEvents"] if ev.get("cat") == "dispatch"
+    }
+    assert expected <= chrome_ops
+
+
+@pytest.mark.parametrize("exec_kind", EXEC_KINDS)
+def test_dispatch_counts_unchanged_by_tracing(exec_kind):
+    """Tracing may add events, never launches: the Counter face of the
+    dispatch log must be identical with tracing on and off (the BENCH
+    launch-count pins diff these counts exactly)."""
+    ex = make_executor(exec_kind)
+    trace_mod.reset()
+    ex.dispatch_log.clear()
+    _axis_spmv(ex)
+    off_counts = dict(ex.dispatch_log)
+    assert not ex.dispatch_log.events  # disabled tracing records no events
+
+    trace_mod.enable()
+    try:
+        ex.dispatch_log.clear()
+        _axis_spmv(ex)
+        on_counts = dict(ex.dispatch_log)
+    finally:
+        trace_mod.reset()
+    assert on_counts == off_counts

@@ -1,0 +1,92 @@
+"""Metrics registry: series identity, kinds, exporters, dispatch folding."""
+
+import pytest
+
+from repro.observability import metrics
+from repro.observability.events import DispatchEvent
+
+
+@pytest.fixture(autouse=True)
+def _fresh_registry():
+    metrics.reset()
+    yield
+    metrics.reset()
+
+
+def test_counter_gauge_histogram_basics():
+    c = metrics.counter("reqs", op="spmv")
+    c.inc()
+    c.inc(2)
+    assert c.value == 3
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+    g = metrics.gauge("gbs", op="spmv")
+    g.set(12.5)
+    g.set(10.0)
+    assert g.value == 10.0
+
+    h = metrics.histogram("wall_us", op="spmv")
+    for v in (1.0, 3.0, 100.0):
+        h.observe(v)
+    assert h.count == 3 and h.min == 1.0 and h.max == 100.0
+    assert h.mean == pytest.approx(104.0 / 3)
+    assert h.buckets == {1: 1, 4: 1, 128: 1}  # pow2 upper bounds
+
+
+def test_series_identity_and_kind_conflicts():
+    # same (name, labels) -> same object; label order must not matter
+    a = metrics.counter("n", op="x", space="xla")
+    b = metrics.counter("n", space="xla", op="x")
+    assert a is b
+    assert metrics.counter("n", op="y") is not a
+    with pytest.raises(TypeError):
+        metrics.gauge("n", op="x", space="xla")
+
+
+def test_jsonl_roundtrip_and_table(tmp_path):
+    metrics.counter("dispatch_total", op="spmv_csr").inc(4)
+    metrics.gauge("gbs", op="spmv_csr").set(1.25)
+    metrics.histogram("wall", op="spmv_csr").observe(7.0)
+    path = str(tmp_path / "m.jsonl")
+    metrics.export_jsonl(path)
+    records = metrics.load_jsonl(path)
+    assert len(records) == 3
+    by_name = {r["name"]: r for r in records}
+    assert by_name["dispatch_total"]["value"] == 4
+    assert by_name["dispatch_total"]["labels"] == {"op": "spmv_csr"}
+    assert by_name["wall"]["count"] == 1
+
+    table = metrics.render_table()
+    assert "dispatch_total" in table and "op=spmv_csr" in table
+    assert metrics.render_table() != "(no metrics recorded)"
+    metrics.reset()
+    assert metrics.render_table() == "(no metrics recorded)"
+
+
+def _event(wall_us=10.0, est_bytes=8000):
+    return DispatchEvent(
+        op="spmv_csr", space="xla", executor="XlaExecutor", target="cpu_xla",
+        shapes=((8,), (8, 8)), shape_bucket=64, launch=None,
+        wall_us=wall_us, est_bytes=est_bytes, ts_us=0.0,
+    )
+
+
+def test_observe_dispatch_folds_counters_and_gauges():
+    labels = dict(op="spmv_csr", space="xla", target="cpu_xla")
+    metrics.observe_dispatch(_event(), hbm_bandwidth=100e9)
+    metrics.observe_dispatch(_event(wall_us=5.0), hbm_bandwidth=100e9)
+    assert metrics.counter("dispatch_total", **labels).value == 2
+    assert metrics.histogram("dispatch_wall_us", **labels).count == 2
+    # last event: 8000 B / 5 us = 1.6 GB/s; bound 100 GB/s -> 0.016
+    assert metrics.gauge("dispatch_gbs", **labels).value == pytest.approx(1.6)
+    assert metrics.gauge(
+        "dispatch_frac_of_bound", **labels
+    ).value == pytest.approx(0.016)
+
+
+def test_observe_dispatch_without_bytes_skips_gauges():
+    metrics.observe_dispatch(_event(est_bytes=0))
+    names = {r["name"] for r in metrics.samples()}
+    assert "dispatch_gbs" not in names
+    assert "dispatch_total" in names

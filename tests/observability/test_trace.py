@@ -1,0 +1,132 @@
+"""Tracer unit tests: spans, export, validation, and the zero-overhead pin."""
+
+import gc
+import json
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import make_executor, registry
+from repro.observability import trace
+
+
+@pytest.fixture(autouse=True)
+def _clean_tracer():
+    trace.reset()
+    yield
+    trace.reset()
+
+
+def test_disabled_span_is_shared_singleton():
+    assert not trace.enabled()
+    s1 = trace.span("a", n=1)
+    s2 = trace.span("b", other="x")
+    assert s1 is s2  # no allocation on the disabled path
+    with s1:
+        pass
+
+
+def test_nested_spans_record_complete_events():
+    tracer = trace.enable()
+    with trace.span("outer", level=0):
+        with trace.span("inner", level=1):
+            pass
+    trace.disable()
+    names = [ev["name"] for ev in tracer.events]
+    assert names == ["inner", "outer"]  # inner closes first
+    outer = tracer.events[1]
+    inner = tracer.events[0]
+    assert outer["ph"] == "X" and inner["ph"] == "X"
+    # containment: outer starts before inner and ends after it
+    assert outer["ts"] <= inner["ts"]
+    assert outer["ts"] + outer["dur"] >= inner["ts"] + inner["dur"]
+    assert outer["args"] == {"level": 0}
+
+
+def test_instant_events_and_validation():
+    tracer = trace.enable()
+    trace.instant("marker", detail="here")
+    data = tracer.to_json()
+    assert trace.validate_trace(data) == []
+    (ev,) = data["traceEvents"]
+    assert ev["ph"] == "i" and ev["s"] == "t"
+
+
+def test_export_roundtrip(tmp_path):
+    path = str(tmp_path / "trace.json")
+    with trace.tracing(path):
+        with trace.span("work", n=3):
+            pass
+    assert trace.validate_trace(path) == []
+    with open(path) as f:
+        data = json.load(f)
+    assert data["traceEvents"][0]["name"] == "work"
+    assert data["displayTimeUnit"] == "ms"
+    # context manager disabled tracing on exit
+    assert not trace.enabled()
+
+
+def test_validate_catches_malformed_events():
+    bad = {
+        "traceEvents": [
+            {"name": "", "ph": "X", "ts": 0, "dur": 1, "pid": 1, "tid": 1},
+            {"name": "x", "ph": "?", "ts": 0, "pid": 1, "tid": 1},
+            {"name": "y", "ph": "X", "ts": 0, "pid": 1, "tid": 1},  # no dur
+            {"name": "z", "ph": "X", "ts": 0, "dur": 1, "pid": "a", "tid": 1},
+        ]
+    }
+    errors = trace.validate_trace(bad)
+    assert len(errors) == 4
+    assert trace.validate_trace({"nope": []}) == ["missing 'traceEvents' list"]
+    assert trace.validate_trace([1, 2]) != []
+
+
+def test_enable_from_args_and_cli_flag(tmp_path):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    trace.add_cli_flag(ap)
+    path = str(tmp_path / "t.json")
+    args = ap.parse_args(["--trace", path])
+    assert trace.enable_from_args(args) == path
+    assert trace.enabled()
+    with trace.span("s"):
+        pass
+    assert trace.export() == path
+    assert trace.validate_trace(path) == []
+    # no flag -> stays disabled
+    trace.reset()
+    assert trace.enable_from_args(ap.parse_args([])) is None
+    assert not trace.enabled()
+
+
+def test_disabled_dispatch_retains_no_allocations():
+    """The overhead pin: with tracing off, repeated dispatches must not
+    retain memory (no event objects, no trace records, no per-call state).
+
+    Measured as live-block growth across a batch of dispatches after a
+    warmup round (the warmup pays one-time costs: Counter entries, jit/XLA
+    caches, dtype interning)."""
+    ex = make_executor("xla")
+    op = registry.operation("blas_dot")
+    x = jnp.asarray(np.ones(64, np.float32))
+
+    def run(n):
+        for _ in range(n):
+            op(x, x, executor=ex)
+
+    assert not trace.enabled()
+    run(20)  # warmup: first-call caches, Counter keys
+    deltas = []
+    for _ in range(3):
+        gc.collect()
+        before = sys.getallocatedblocks()
+        run(50)
+        gc.collect()
+        deltas.append(sys.getallocatedblocks() - before)
+    # interpreter noise can wiggle a few blocks; 50 retained events would
+    # show up as hundreds
+    assert min(deltas) <= 8, f"dispatch path leaked blocks: {deltas}"
+    assert not ex.dispatch_log.events
