@@ -7,7 +7,9 @@ Collects, with the same measurement machinery as the CSV benchmarks:
 * Krylov time-to-tolerance plus fused-vs-unfused-vs-pipelined iteration
   timings on the solve hot path;
 * distributed per-shard streaming bandwidth and the psum-per-iteration
-  structure of pipelined CG (when the process has multiple devices).
+  structure of pipelined CG (when the process has multiple devices);
+* continuous-batching serve throughput/latency plus the setup cache's
+  generation-launch pins (a fully cached request launches zero generates).
 
 The ``pinned`` block holds the values the regression gate
 (:mod:`benchmarks.check_regression`) diffs across PR snapshots — chosen to
@@ -21,6 +23,7 @@ Run:  PYTHONPATH=src python -m benchmarks.run --bench-json BENCH_pr6.json
 from __future__ import annotations
 
 import json
+import time
 from typing import Dict, List
 
 import numpy as np
@@ -36,7 +39,7 @@ from benchmarks.common import (
 )
 
 SCHEMA = "repro-bench/1"
-PR = 7
+PR = 8
 
 
 def _spd(n=96):
@@ -276,6 +279,86 @@ def _dist_records() -> tuple:
     return records, pinned
 
 
+def _serve_records() -> tuple:
+    """Continuous-batching solve service: throughput, latency, cache pins.
+
+    The structural pins are dispatch-log generation counts — the setup
+    cache's acceptance claim.  Over a repeat-heavy stream the cold pass may
+    generate pattern tables only once per distinct pattern, and a request
+    whose pattern *and* values are both cached must launch **zero**
+    generation operations.  Hit counts are pinned inverted (misses, which
+    must not grow) plus the hit rate as a ratio.
+    """
+    import copy
+
+    from repro.core import make_executor
+    from repro.observability import metrics
+    from repro.serve import (
+        ContinuousBatchEngine,
+        ServeConfig,
+        TrafficConfig,
+        generate_traffic,
+    )
+    from repro.solvers import Stop
+
+    ex = make_executor("xla")
+    config = ServeConfig(slots=4, chunk_sweeps=4,
+                         stop=Stop(max_iters=300, reduction_factor=1e-5))
+    engine = ContinuousBatchEngine(config, executor=ex)
+    traffic = generate_traffic(TrafficConfig(
+        num_requests=32, gallery_size=3, repeat_ratio=0.6, n=24, seed=5,
+    ))
+    # a guaranteed full-hit request: the same matrix as the first arrival
+    hit_req = copy.deepcopy(traffic[0][1])
+
+    ex.dispatch_log.clear()
+    t0 = time.perf_counter()
+    for _, req in traffic:
+        engine.submit(req)
+    responses = engine.drain()
+    wall = time.perf_counter() - t0
+    cold_generates = dict(ex.dispatch_log).get("serve_generate_pattern", 0)
+
+    ex.dispatch_log.clear()
+    engine.submit(hit_req)
+    (hit_resp,) = engine.drain()
+    hit_log = dict(ex.dispatch_log)
+    hit_generates = (hit_log.get("serve_generate_pattern", 0)
+                     + hit_log.get("serve_generate_factors", 0))
+
+    num = len(responses)
+    p_hits = sum(r.pattern_hit for r in responses)
+    h = metrics.histogram("serve_latency_s")
+    records = [{
+        "kind": "serve",
+        "solver": config.solver,
+        "format": config.fmt,
+        "executor": "xla",
+        "requests": num,
+        "slots": config.slots,
+        "wall_s": wall,
+        "solves_per_s": num / max(wall, 1e-9),
+        "iterations": sum(r.iterations for r in responses),
+        "latency_p50_s": h.quantile(0.5),
+        "latency_p99_s": h.quantile(0.99),
+        "pattern_hits": p_hits,
+        "factors_hits": sum(r.factors_hit for r in responses),
+    }]
+    pinned = {
+        "serve_cold_generate_launches": int(cold_generates),
+        "serve_hit_request_generate_launches": int(hit_generates),
+        "serve_pattern_misses": int(num - p_hits),
+        "serve_pattern_hit_rate": round(p_hits / num, 4),
+        "serve_all_converged": bool(
+            all(r.converged for r in responses) and hit_resp.converged
+        ),
+        "serve_hit_request_full_hit": bool(
+            hit_resp.pattern_hit and hit_resp.factors_hit
+        ),
+    }
+    return records, pinned
+
+
 def collect() -> Dict:
     from benchmarks import bench_stream
 
@@ -287,8 +370,10 @@ def collect() -> Dict:
     solver, solver_pinned = _solver_records()
     print("# distributed: per-shard bandwidth + psum structure")
     dist, dist_pinned = _dist_records()
+    print("# serve: continuous batching + setup-cache launch pins")
+    serve, serve_pinned = _serve_records()
 
-    pinned = dict(solver_pinned, **dist_pinned)
+    pinned = dict(solver_pinned, **dist_pinned, **serve_pinned)
     # frac-of-bound for the pinned spmv cases (xla space: real timings)
     for r in spmv:
         if r["executor"] == "xla":
@@ -303,7 +388,7 @@ def collect() -> Dict:
             "backend": jax.default_backend(),
             "devices": len(jax.devices()),
         },
-        "records": spmv + solver + dist,
+        "records": spmv + solver + dist + serve,
         "pinned": pinned,
     }
 

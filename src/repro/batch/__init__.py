@@ -35,11 +35,17 @@ from repro.batch.ops import (
     batch_scal,
 )
 from repro.batch.solvers import (
+    BatchBicgstabState,
+    BatchCgState,
     BatchScalarJacobi,
     BatchSolveResult,
     batch_bicgstab,
+    batch_bicgstab_advance,
+    batch_bicgstab_init,
     batch_block_jacobi_preconditioner,
     batch_cg,
+    batch_cg_advance,
+    batch_cg_init,
     batch_identity_preconditioner,
     batch_jacobi_preconditioner,
 )
@@ -64,9 +70,15 @@ __all__ = [
     "batch_scal",
     "batch_norm2",
     "BatchSolveResult",
+    "BatchCgState",
+    "BatchBicgstabState",
     "BatchScalarJacobi",
     "batch_cg",
+    "batch_cg_init",
+    "batch_cg_advance",
     "batch_bicgstab",
+    "batch_bicgstab_init",
+    "batch_bicgstab_advance",
     "batch_jacobi_preconditioner",
     "batch_block_jacobi_preconditioner",
     "batch_identity_preconditioner",

@@ -36,9 +36,15 @@ from repro.sparse.ops import _csr_row_ids
 
 __all__ = [
     "BatchSolveResult",
+    "BatchCgState",
+    "BatchBicgstabState",
     "BatchScalarJacobi",
     "batch_cg",
+    "batch_cg_init",
+    "batch_cg_advance",
     "batch_bicgstab",
+    "batch_bicgstab_init",
+    "batch_bicgstab_advance",
     "batch_jacobi_preconditioner",
     "batch_block_jacobi_preconditioner",
     "batch_identity_preconditioner",
@@ -245,44 +251,91 @@ batch_identity_preconditioner = BatchIdentity()
 # =============================================================================
 
 
-def batch_cg(
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BatchCgState:
+    """Full in-flight state of a masked batched CG sweep — a pytree, so it
+    round-trips through ``jax.jit`` boundaries and lets a long-running caller
+    (the continuous-batching serve engine) advance the loop in chunks,
+    swapping converged rows for fresh systems between chunks."""
+
+    X: jax.Array      # (nb, n) iterates
+    R: jax.Array      # (nb, n) residuals
+    Z: jax.Array      # (nb, n) preconditioned residuals
+    P: jax.Array      # (nb, n) search directions
+    rz: jax.Array     # (nb,)  <R, Z>
+    iters: jax.Array  # (nb,)  per-system iteration counts
+    k: jax.Array      # ()     global sweep counter
+    rnorm: jax.Array  # (nb,)  per-system residual norms
+    hist: jax.Array   # (cap, nb) residual history rows
+
+
+def _empty_result(B: jax.Array, stop: Stop, history) -> BatchSolveResult:
+    """nb == 0: nothing to launch — no dispatches, no while_loop."""
+    stop.threshold(jnp.zeros((0,), B.dtype))  # still reject degenerate stops
+    z = jnp.zeros((0,), B.dtype)
+    hist = convergence.init(convergence.capacity(history, stop),
+                            batch=0, dtype=B.dtype)
+    return BatchSolveResult(B, jnp.zeros((0,), jnp.int32), z,
+                            jnp.zeros((0,), bool), convergence.finalize(hist))
+
+
+def batch_cg_init(
     A: BatchMatrixLike,
     B: jax.Array,
-    X0: Optional[jax.Array] = None,
+    X: jax.Array,
     *,
-    stop: Stop = Stop(),
-    M: Optional[Union[Callable, str]] = None,
-    precond_opts: Optional[dict] = None,
+    M: Optional[Callable] = None,
     executor=None,
-    history=None,
-) -> BatchSolveResult:
-    """Batched preconditioned CG (SPD systems), per-system stopping.
-
-    ``B`` is ``(nb, n)`` — one right-hand side per system.  Converged systems
-    freeze (their state rides through the loop unchanged) while the rest keep
-    iterating; the loop exits when all have converged or ``max_iters`` hits.
-    """
+    history_cap: int = 0,
+) -> BatchCgState:
+    """Initial CG state for iterate ``X``: residual, first search direction,
+    per-system norms — the op sequence :func:`batch_cg` has always issued
+    before entering its while_loop, factored out so admit/refresh paths can
+    rebuild individual rows with bitwise-identical arithmetic."""
     ex = executor
-    X, M = _setup(A, B, X0, M, ex, precond_opts)
+    M = M or batch_identity_preconditioner
     nb = B.shape[0]
-    bnorm = ops.batch_norm2(B, executor=ex)
-    thresh = stop.threshold(bnorm)  # (nb,)
-
     R = B - _apply(A, X, ex)
     Z = M(R)
     P = Z
     rz = ops.batch_dot(R, Z, executor=ex)
     rnorm = ops.batch_norm2(R, executor=ex)
     iters = jnp.zeros(nb, jnp.int32)
-    hist0 = convergence.init(convergence.capacity(history, stop),
-                             batch=nb, dtype=rnorm.dtype)
+    hist0 = convergence.init(history_cap, batch=nb, dtype=rnorm.dtype)
+    return BatchCgState(X, R, Z, P, rz, iters, jnp.int32(0), rnorm, hist0)
 
-    def cond(state):
-        k, rnorm = state[6], state[7]
-        return jnp.any(rnorm > thresh) & (k < stop.max_iters)
 
-    def body(state):
-        X, R, Z, P, rz, iters, k, rnorm, hist = state
+def batch_cg_advance(
+    A: BatchMatrixLike,
+    state: BatchCgState,
+    thresh: jax.Array,
+    *,
+    stop: Stop = Stop(),
+    M: Optional[Callable] = None,
+    num_sweeps: Optional[int] = None,
+    executor=None,
+) -> BatchCgState:
+    """Advance the masked CG while_loop from ``state``.
+
+    Runs until every system satisfies ``rnorm <= thresh`` or the global sweep
+    counter reaches ``stop.max_iters`` — or, when ``num_sweeps`` is given, for
+    at most that many additional sweeps (the chunked-advance hook continuous
+    batching uses to regain control between admissions).  The loop body is the
+    historical :func:`batch_cg` body, unchanged."""
+    ex = executor
+    M = M or batch_identity_preconditioner
+    k0 = state.k
+
+    def cond(st: BatchCgState):
+        go = jnp.any(st.rnorm > thresh) & (st.k < stop.max_iters)
+        if num_sweeps is not None:
+            go = go & (st.k - k0 < num_sweeps)
+        return go
+
+    def body(st: BatchCgState):
+        X, R, Z, P = st.X, st.R, st.Z, st.P
+        rz, iters, k, rnorm, hist = st.rz, st.iters, st.k, st.rnorm, st.hist
         active = rnorm > thresh  # (nb,)
         a2 = active[:, None]
         AP = _apply(A, P, ex)
@@ -307,23 +360,13 @@ def batch_cg(
         iters = iters + active.astype(jnp.int32)
         # frozen systems keep re-recording their final norm — the history row
         # at iteration k is the batch's residual state after k+1 sweeps
-        return (X, R, Z, P, rz, iters, k + 1, rnorm,
-                convergence.push(hist, k, rnorm))
+        return BatchCgState(X, R, Z, P, rz, iters, k + 1, rnorm,
+                            convergence.push(hist, k, rnorm))
 
-    state = (X, R, Z, P, rz, iters, jnp.int32(0), rnorm, hist0)
-    (X, R, Z, P, rz, iters, k, rnorm, hist) = jax.lax.while_loop(
-        cond, body, state
-    )
-    return BatchSolveResult(X, iters, rnorm, rnorm <= thresh,
-                            convergence.finalize(hist))
+    return jax.lax.while_loop(cond, body, state)
 
 
-# =============================================================================
-# Batched BiCGSTAB
-# =============================================================================
-
-
-def batch_bicgstab(
+def batch_cg(
     A: BatchMatrixLike,
     B: jax.Array,
     X0: Optional[jax.Array] = None,
@@ -334,29 +377,104 @@ def batch_bicgstab(
     executor=None,
     history=None,
 ) -> BatchSolveResult:
-    """Batched preconditioned BiCGSTAB (general systems), per-system stopping."""
-    ex = executor
-    X, M = _setup(A, B, X0, M, ex, precond_opts)
-    nb = B.shape[0]
-    bnorm = ops.batch_norm2(B, executor=ex)
-    thresh = stop.threshold(bnorm)
-    eps = jnp.asarray(1e-30, B.dtype)
+    """Batched preconditioned CG (SPD systems), per-system stopping.
 
+    ``B`` is ``(nb, n)`` — one right-hand side per system.  Converged systems
+    freeze (their state rides through the loop unchanged) while the rest keep
+    iterating; the loop exits when all have converged or ``max_iters`` hits.
+    An empty batch (``nb == 0``) returns immediately without issuing a single
+    kernel launch — continuous batching hits this between bursts.
+    """
+    ex = executor
+    if B.shape[0] == 0:
+        return _empty_result(B, stop, history)
+    X, M = _setup(A, B, X0, M, ex, precond_opts)
+    bnorm = ops.batch_norm2(B, executor=ex)
+    thresh = stop.threshold(bnorm)  # (nb,)
+    state = batch_cg_init(
+        A, B, X, M=M, executor=ex,
+        history_cap=convergence.capacity(history, stop),
+    )
+    state = batch_cg_advance(A, state, thresh, stop=stop, M=M, executor=ex)
+    return BatchSolveResult(state.X, state.iters, state.rnorm,
+                            state.rnorm <= thresh,
+                            convergence.finalize(state.hist))
+
+
+# =============================================================================
+# Batched BiCGSTAB
+# =============================================================================
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BatchBicgstabState:
+    """In-flight state of a masked batched BiCGSTAB sweep (pytree).
+
+    ``R_hat`` (the shadow residual, fixed per system at admission) is carried
+    in the state rather than closed over so a serve engine can refresh it row
+    by row when a slot is re-seeded with a new system."""
+
+    X: jax.Array       # (nb, n) iterates
+    R: jax.Array       # (nb, n) residuals
+    R_hat: jax.Array   # (nb, n) shadow residuals
+    P: jax.Array       # (nb, n) search directions
+    rho: jax.Array     # (nb,)  <R_hat, R>
+    iters: jax.Array   # (nb,)  per-system iteration counts
+    k: jax.Array       # ()     global sweep counter
+    rnorm: jax.Array   # (nb,)  per-system residual norms
+    hist: jax.Array    # (cap, nb) residual history rows
+
+
+def batch_bicgstab_init(
+    A: BatchMatrixLike,
+    B: jax.Array,
+    X: jax.Array,
+    *,
+    executor=None,
+    history_cap: int = 0,
+) -> BatchBicgstabState:
+    """Initial BiCGSTAB state for iterate ``X`` — the pre-loop op sequence of
+    :func:`batch_bicgstab`, factored out for row-wise admit/refresh."""
+    ex = executor
+    nb = B.shape[0]
     R = B - _apply(A, X, ex)
     R_hat = R
     rho = ops.batch_dot(R_hat, R, executor=ex)
     P = R
     rnorm = ops.batch_norm2(R, executor=ex)
     iters = jnp.zeros(nb, jnp.int32)
-    hist0 = convergence.init(convergence.capacity(history, stop),
-                             batch=nb, dtype=rnorm.dtype)
+    hist0 = convergence.init(history_cap, batch=nb, dtype=rnorm.dtype)
+    return BatchBicgstabState(X, R, R_hat, P, rho, iters, jnp.int32(0),
+                              rnorm, hist0)
 
-    def cond(state):
-        k, rnorm = state[5], state[6]
-        return jnp.any(rnorm > thresh) & (k < stop.max_iters)
 
-    def body(state):
-        X, R, P, rho, iters, k, rnorm, hist = state
+def batch_bicgstab_advance(
+    A: BatchMatrixLike,
+    state: BatchBicgstabState,
+    thresh: jax.Array,
+    *,
+    stop: Stop = Stop(),
+    M: Optional[Callable] = None,
+    num_sweeps: Optional[int] = None,
+    executor=None,
+) -> BatchBicgstabState:
+    """Advance the masked BiCGSTAB while_loop from ``state`` (see
+    :func:`batch_cg_advance` for the chunked-advance contract)."""
+    ex = executor
+    M = M or batch_identity_preconditioner
+    eps = jnp.asarray(1e-30, state.R.dtype)
+    k0 = state.k
+
+    def cond(st: BatchBicgstabState):
+        go = jnp.any(st.rnorm > thresh) & (st.k < stop.max_iters)
+        if num_sweeps is not None:
+            go = go & (st.k - k0 < num_sweeps)
+        return go
+
+    def body(st: BatchBicgstabState):
+        X, R, R_hat, P = st.X, st.R, st.R_hat, st.P
+        rho, iters, k, rnorm, hist = st.rho, st.iters, st.k, st.rnorm, st.hist
         active = rnorm > thresh
         a2 = active[:, None]
         P_hat = M(P)
@@ -380,10 +498,39 @@ def batch_bicgstab(
         rho = jnp.where(active, rho_new, rho)
         rnorm = jnp.where(active, jnp.sqrt(rr), rnorm)
         iters = iters + active.astype(jnp.int32)
-        return (X, R, P, rho, iters, k + 1, rnorm,
-                convergence.push(hist, k, rnorm))
+        return BatchBicgstabState(X, R, R_hat, P, rho, iters, k + 1, rnorm,
+                                  convergence.push(hist, k, rnorm))
 
-    state = (X, R, P, rho, iters, jnp.int32(0), rnorm, hist0)
-    X, R, P, rho, iters, k, rnorm, hist = jax.lax.while_loop(cond, body, state)
-    return BatchSolveResult(X, iters, rnorm, rnorm <= thresh,
-                            convergence.finalize(hist))
+    return jax.lax.while_loop(cond, body, state)
+
+
+def batch_bicgstab(
+    A: BatchMatrixLike,
+    B: jax.Array,
+    X0: Optional[jax.Array] = None,
+    *,
+    stop: Stop = Stop(),
+    M: Optional[Union[Callable, str]] = None,
+    precond_opts: Optional[dict] = None,
+    executor=None,
+    history=None,
+) -> BatchSolveResult:
+    """Batched preconditioned BiCGSTAB (general systems), per-system stopping.
+
+    Empty batches (``nb == 0``) return immediately with no kernel launches.
+    """
+    ex = executor
+    if B.shape[0] == 0:
+        return _empty_result(B, stop, history)
+    X, M = _setup(A, B, X0, M, ex, precond_opts)
+    bnorm = ops.batch_norm2(B, executor=ex)
+    thresh = stop.threshold(bnorm)
+    state = batch_bicgstab_init(
+        A, B, X, executor=ex,
+        history_cap=convergence.capacity(history, stop),
+    )
+    state = batch_bicgstab_advance(A, state, thresh, stop=stop, M=M,
+                                   executor=ex)
+    return BatchSolveResult(state.X, state.iters, state.rnorm,
+                            state.rnorm <= thresh,
+                            convergence.finalize(state.hist))

@@ -218,7 +218,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, zero: str = "zero1"
              remat: str = "block", moe_dispatch: str = "gather",
              flash_cost: bool = False, tag: str = "",
              save: bool = True, verbose: bool = True) -> Dict:
-    t0 = time.time()
+    t0 = time.perf_counter()
     fn, raw_fn, args, mesh, cfg, shape = build_cell(
         arch, shape_name, multi_pod=multi_pod, zero=zero, attn=attn, sp=sp,
         capacity=capacity, remat=remat, moe_dispatch=moe_dispatch,
@@ -226,9 +226,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, zero: str = "zero1"
     n_chips = mesh.size
     with mesh_lib_use_mesh(mesh):
         lowered = fn.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
         logical = costmodel.function_cost(raw_fn, *args)
         logical_flash = None
         if flash_cost and shape.kind in ("prefill", "decode"):

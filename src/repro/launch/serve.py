@@ -45,10 +45,10 @@ def serve(cfg, *, batch: int, prompt_len: int, gen_len: int, seed: int = 0,
     decode_fn = jax.jit(steps_lib.make_decode_step(cfg))
 
     cache = lm.init_cache(cfg, batch, s_max)
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, cache = prefill_fn(params, feed, cache)
     jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
 
     key = jax.random.PRNGKey(seed)
 
@@ -61,7 +61,7 @@ def serve(cfg, *, batch: int, prompt_len: int, gen_len: int, seed: int = 0,
 
     tokens = sample(logits, key)  # (B,)
     generated = [tokens]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for t in range(prompt_len, prompt_len + gen_len - 1):
         key, sub = jax.random.split(key)
         step_feed = {}
@@ -76,7 +76,7 @@ def serve(cfg, *, batch: int, prompt_len: int, gen_len: int, seed: int = 0,
         tokens = sample(logits, sub)
         generated.append(tokens)
     jax.block_until_ready(tokens)
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
 
     out = jnp.stack(generated, axis=1)  # (B, gen_len)
     tok_s = batch * (gen_len - 1) / max(t_decode, 1e-9)
@@ -95,6 +95,8 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="rng seed for prompts and sampling")
     trace.add_cli_flag(ap)
     args = ap.parse_args()
     trace.enable_from_args(args)
@@ -104,6 +106,7 @@ def main() -> None:
         batch=args.batch,
         prompt_len=args.prompt_len,
         gen_len=args.gen_len,
+        seed=args.seed,
         greedy=args.temperature == 0.0,
         temperature=max(args.temperature, 1e-3),
     )

@@ -98,7 +98,7 @@ def train(
     monitor = StragglerMonitor(window=50, factor=4.0)
 
     losses = []
-    t_start = time.time()
+    t_start = time.perf_counter()
     with mesh:
         for step in range(start, steps):
             batch = {k: jnp.asarray(v) for k, v in next(data_iter).items()}
@@ -135,7 +135,7 @@ def train(
                 return params, losses
     if ckpt is not None:
         ckpt.wait()
-    dt = time.time() - t_start
+    dt = time.perf_counter() - t_start
     tok_s = (steps - start) * global_batch * seq_len / max(dt, 1e-9)
     print(f"[train] done: {steps - start} steps in {dt:.1f}s ({tok_s:.0f} tok/s); "
           f"final loss {losses[-1]:.4f} (entropy floor {entropy_floor(data_cfg):.4f})")

@@ -39,11 +39,32 @@ __all__ = [
 ]
 
 
-def _bucket_of(v: float) -> int:
-    """Power-of-two bucket upper bound containing ``v`` (>= 1)."""
-    b = 1
-    while b < v and b < (1 << 62):
-        b <<= 1
+#: smallest sub-unit bucket exponent: values below 2^-30 (~0.93 ns when the
+#: unit is seconds) clamp into the 2^-30 bucket.
+_MIN_BUCKET_EXP = -30
+
+
+def _bucket_of(v: float):
+    """Power-of-two bucket upper bound containing ``v``.
+
+    Buckets ``>= 1`` keep their historical integer labels (1, 2, 4, ...);
+    values in ``(0, 1]`` land in fractional buckets ``2^-1 .. 2^-30`` (the
+    smallest bucket also absorbs everything at or below ``2^-30``, including
+    non-positive values).  Without the sub-unit buckets every wall-time
+    histogram measured in seconds collapsed into the ``1`` bin, making
+    p50/p99 unreadable — exactly the statistics the solve-serve loop reports.
+    """
+    if v > 1:
+        b = 1
+        while b < v and b < (1 << 62):
+            b <<= 1
+        return b
+    if v > 0.5:
+        return 1
+    floor = 2.0 ** _MIN_BUCKET_EXP
+    b = 0.5
+    while b * 0.5 >= v and b > floor:
+        b *= 0.5
     return b
 
 
@@ -103,6 +124,28 @@ class Histogram:
     @property
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Upper bound of the bucket holding the ``q``-quantile (0 <= q <= 1).
+
+        Resolution is one power of two — coarse, but monotone and cheap, and
+        with the sub-unit buckets it distinguishes microseconds from
+        milliseconds from seconds, which is what a p50/p99 latency report
+        needs.  Returns None on an empty histogram.
+        """
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        if not self.count:
+            return None
+        target = q * self.count
+        cum = 0
+        bound = None
+        for b in sorted(self.buckets):
+            bound = b
+            cum += self.buckets[b]
+            if cum >= target:
+                break
+        return float(bound)
 
     def sample(self) -> Dict[str, Any]:
         return {

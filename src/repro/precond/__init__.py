@@ -13,8 +13,13 @@ from __future__ import annotations
 from repro.precond.block_jacobi import (
     ADAPTIVE_TAU,
     BatchBlockJacobi,
+    BatchBlockJacobiPattern,
     BlockJacobi,
     batch_block_jacobi,
+    batch_block_jacobi_blocks,
+    batch_block_jacobi_factors,
+    batch_block_jacobi_from_factors,
+    batch_block_jacobi_pattern,
     block_jacobi,
     invert_blocks,
     natural_blocks,
@@ -27,8 +32,13 @@ __all__ = [
     "ADAPTIVE_TAU",
     "BlockJacobi",
     "BatchBlockJacobi",
+    "BatchBlockJacobiPattern",
     "block_jacobi",
     "batch_block_jacobi",
+    "batch_block_jacobi_pattern",
+    "batch_block_jacobi_blocks",
+    "batch_block_jacobi_factors",
+    "batch_block_jacobi_from_factors",
     "invert_blocks",
     "natural_blocks",
     "select_block_precisions",

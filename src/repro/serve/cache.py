@@ -1,0 +1,307 @@
+"""Pattern-keyed setup cache — Ginkgo's generate/apply separation as a cache.
+
+Ginkgo splits every preconditioner/solver factory into an expensive
+``generate`` (analyze the matrix, build factors) and a cheap ``apply``.  In a
+serving loop the same sparsity patterns recur constantly, so the generate
+products are cached in two tiers:
+
+* **pattern tier** — everything derivable from the sparsity structure alone:
+  block pointers, value-slot tables, ELL layout maps, gather indices, and
+  (via the engine) the jit-compiled solver closures.  Keyed by
+  :func:`pattern_key`, a hash over ``(indptr, indices, shape, config)``.
+* **values tier** — the numeric factors (inverted block-Jacobi blocks) for
+  one concrete value set, keyed inside its pattern entry by
+  :func:`values_fingerprint`.
+
+Generation itself runs through *registered operations*
+(``serve_generate_pattern`` / ``serve_generate_factors``) — the analogue of
+``GKO_REGISTER_OPERATION`` for the setup path — so the executor's dispatch
+log pins the acceptance claim directly: a cache-hit request shows **zero**
+generation dispatches.
+
+Both tiers are LRU with hit/miss/eviction counters in the PR-7 metrics
+registry (``serve_cache_{hits,misses,evictions}`` labelled by tier).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.observability import metrics
+from repro.precond import (
+    BatchBlockJacobiPattern,
+    batch_block_jacobi_factors,
+    batch_block_jacobi_pattern,
+)
+
+__all__ = [
+    "PatternSetup",
+    "SetupCache",
+    "pattern_key",
+    "values_fingerprint",
+    "serve_generate_pattern_op",
+    "serve_generate_factors_op",
+]
+
+
+def pattern_key(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    shape: Tuple[int, int],
+    config: str = "",
+) -> str:
+    """Hash of the sparsity pattern + lane configuration.
+
+    Two requests share setup products iff their CSR index structure, matrix
+    shape, and lane config (format / solver / preconditioner geometry —
+    anything that changes the generated tables or compiled closures) agree.
+    """
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(np.asarray(indptr, np.int64)).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(indices, np.int64)).tobytes())
+    h.update(f"{tuple(shape)}|{config}".encode())
+    return h.hexdigest()
+
+
+def values_fingerprint(values: np.ndarray) -> str:
+    """Hash of one concrete value set (the values-tier cache key)."""
+    a = np.ascontiguousarray(np.asarray(values))
+    return hashlib.sha1(a.tobytes() + str(a.dtype).encode()).hexdigest()
+
+
+@dataclasses.dataclass(eq=False)
+class PatternSetup:
+    """Pattern-tier generate products for one (pattern, config) key."""
+
+    key: str
+    indptr: np.ndarray
+    indices: np.ndarray
+    shape: Tuple[int, int]
+    fmt: str  # "csr" | "ell"
+    #: ELL column block (m, k) and the CSR-slot -> ELL-slot value map, when
+    #: the lane batches into BatchEll; None for CSR lanes
+    col_idx: Optional[jax.Array] = None
+    ell_map: Optional[np.ndarray] = None
+    #: block-Jacobi pattern tier (slot tables, gather maps); None when the
+    #: lane runs unpreconditioned
+    jacobi: Optional[BatchBlockJacobiPattern] = None
+    #: engine-owned: jit-compiled refresh/advance closures per (slots, solver)
+    closures: Dict[Any, Any] = dataclasses.field(default_factory=dict)
+    #: values-tier LRU: values_fingerprint -> inverted factors (nblocks, bs, bs)
+    factors: "OrderedDict[str, jax.Array]" = dataclasses.field(
+        default_factory=OrderedDict
+    )
+
+    @property
+    def n(self) -> int:
+        return int(self.shape[0])
+
+    @property
+    def nnz(self) -> int:
+        return int(np.asarray(self.indices).size)
+
+    @property
+    def flat_value_len(self) -> int:
+        """Length of one system's flattened value row in lane storage."""
+        if self.fmt == "ell":
+            m, k = self.col_idx.shape
+            return int(m * k)
+        return self.nnz
+
+    def lane_values(self, values: np.ndarray) -> np.ndarray:
+        """CSR request values -> the lane's flat value layout."""
+        if self.fmt == "ell":
+            out = np.zeros(self.flat_value_len, np.asarray(values).dtype)
+            out[self.ell_map] = np.asarray(values)
+            return out
+        return np.asarray(values)
+
+
+# =============================================================================
+# Generation as registered operations (visible in the dispatch log)
+# =============================================================================
+
+serve_generate_pattern_op = registry.operation(
+    "serve_generate_pattern",
+    "pattern-tier setup: block discovery, slot tables, layout maps",
+)
+
+serve_generate_factors_op = registry.operation(
+    "serve_generate_factors",
+    "values-tier setup: block gather + batched Gauss-Jordan inversion",
+)
+
+
+@serve_generate_pattern_op.register("reference")
+def _generate_pattern_ref(
+    ex,
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    shape: Tuple[int, int],
+    *,
+    fmt: str = "csr",
+    precond: str = "block_jacobi",
+    block_size: int = 4,
+) -> PatternSetup:
+    from repro.batch.formats import BatchCsr, BatchEll
+
+    indptr = np.asarray(indptr, np.int64)
+    indices = np.asarray(indices, np.int64)
+    m = int(shape[0])
+    col_idx = None
+    ell_map = None
+    if fmt == "ell":
+        # CSR column order per row, padded with (col 0, value 0) at the tail —
+        # the convention _batch_slot_table and the ELL SpMV kernels share
+        row_nnz = np.diff(indptr)
+        k = int(row_nnz.max()) if m else 1
+        cols = np.zeros((m, max(k, 1)), np.int32)
+        emap = np.zeros(indices.size, np.int64)
+        for i in range(m):
+            lo, hi = int(indptr[i]), int(indptr[i + 1])
+            q = np.arange(hi - lo)
+            cols[i, : hi - lo] = indices[lo:hi]
+            emap[lo:hi] = i * cols.shape[1] + q
+        col_idx = jnp.asarray(cols)
+        ell_map = emap
+        proto = BatchEll(
+            col_idx=col_idx,
+            values=jnp.zeros((1, m, cols.shape[1]), jnp.float32),
+            shape=tuple(shape),
+        )
+    elif fmt == "csr":
+        proto = BatchCsr(
+            indptr=jnp.asarray(indptr, jnp.int32),
+            indices=jnp.asarray(indices, jnp.int32),
+            values=jnp.zeros((1, indices.size), jnp.float32),
+            shape=tuple(shape),
+        )
+    else:
+        raise ValueError(f"unknown lane format {fmt!r} (csr | ell)")
+
+    jacobi = None
+    if precond == "block_jacobi":
+        jacobi = batch_block_jacobi_pattern(proto, block_size, executor=ex)
+    elif precond != "none":
+        raise ValueError(
+            f"unknown serve preconditioner {precond!r} (none | block_jacobi)"
+        )
+
+    return PatternSetup(
+        key="",
+        indptr=indptr,
+        indices=indices,
+        shape=tuple(shape),
+        fmt=fmt,
+        col_idx=col_idx,
+        ell_map=ell_map,
+        jacobi=jacobi,
+    )
+
+
+@serve_generate_factors_op.register("reference")
+def _generate_factors_ref(ex, values: jax.Array, setup: PatternSetup):
+    """Inverted block-Jacobi factors ``(nblocks, bs, bs)`` for one system.
+
+    ``values`` is the system's flat lane-layout value row; the slot gather
+    and Gauss-Jordan inversion are the shared tier-2 helpers, so a factor
+    built here is bitwise the one :func:`repro.precond.batch_block_jacobi`
+    builds inside a cold solve.
+    """
+    return batch_block_jacobi_factors(
+        jnp.asarray(values)[None, :], setup.jacobi
+    )
+
+
+# =============================================================================
+# The two-tier LRU
+# =============================================================================
+
+
+class SetupCache:
+    """LRU cache of :class:`PatternSetup` entries with nested factor LRUs.
+
+    ``capacity`` bounds the number of pattern entries; evicting a pattern
+    drops its factors and compiled closures with it.  ``factors_capacity``
+    bounds the per-pattern values-tier LRU.  Hit/miss/eviction counts are
+    published to the metrics registry under ``serve_cache_*`` with a ``tier``
+    label, so the serve driver's report and the BENCH snapshot read them
+    straight from :func:`repro.observability.metrics.samples`.
+    """
+
+    def __init__(self, capacity: int = 32, factors_capacity: int = 8):
+        if capacity <= 0 or factors_capacity <= 0:
+            raise ValueError("cache capacities must be positive")
+        self.capacity = capacity
+        self.factors_capacity = factors_capacity
+        self._entries: "OrderedDict[str, PatternSetup]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    @property
+    def keys(self):
+        """Pattern keys, LRU -> MRU order."""
+        return tuple(self._entries)
+
+    @staticmethod
+    def _count(name: str, tier: str):
+        return metrics.counter(name, tier=tier)
+
+    def setup(
+        self, key: str, build: Callable[[], PatternSetup]
+    ) -> Tuple[PatternSetup, bool]:
+        """Pattern-tier lookup: ``(entry, hit)``; ``build`` runs on miss."""
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+            self._count("serve_cache_hits", "pattern").inc()
+            return entry, True
+        self._count("serve_cache_misses", "pattern").inc()
+        entry = build()
+        entry.key = key
+        self._entries[key] = entry
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self._count("serve_cache_evictions", "pattern").inc()
+        return entry, False
+
+    def factors(
+        self,
+        entry: PatternSetup,
+        fingerprint: str,
+        build: Callable[[], jax.Array],
+    ) -> Tuple[jax.Array, bool]:
+        """Values-tier lookup inside ``entry``: ``(factors, hit)``."""
+        inv = entry.factors.get(fingerprint)
+        if inv is not None:
+            entry.factors.move_to_end(fingerprint)
+            self._count("serve_cache_hits", "values").inc()
+            return inv, True
+        self._count("serve_cache_misses", "values").inc()
+        inv = build()
+        entry.factors[fingerprint] = inv
+        while len(entry.factors) > self.factors_capacity:
+            entry.factors.popitem(last=False)
+            self._count("serve_cache_evictions", "values").inc()
+        return inv, False
+
+    def stats(self) -> Dict[str, float]:
+        """Current counter values (zeros for series never touched)."""
+        out = {}
+        for name in ("serve_cache_hits", "serve_cache_misses",
+                     "serve_cache_evictions"):
+            for tier in ("pattern", "values"):
+                out[f"{name}_{tier}"] = metrics.counter(name, tier=tier).value
+        return out

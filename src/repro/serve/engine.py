@@ -1,0 +1,417 @@
+"""Continuous-batching solve engine — slots, admit/advance/retire.
+
+One *lane* per sparsity pattern holds a fixed number of batch **slots**; each
+slot carries one in-flight system through the masked batched Krylov loop.
+The engine's tick cycle is:
+
+* **admit** — pending requests are scattered into free slots (values, rhs,
+  cached preconditioner factors), then one jitted ``refresh`` recomputes the
+  solver init state and stopping threshold for exactly the newly seeded rows
+  (``jnp.where`` on the admission mask — untouched rows ride through
+  bitwise unchanged);
+* **advance** — one jitted chunked call into
+  :func:`repro.batch.solvers.batch_cg_advance` /
+  :func:`~repro.batch.solvers.batch_bicgstab_advance` runs up to
+  ``chunk_sweeps`` masked sweeps (JAX cannot admit work into a live
+  ``while_loop``, so the loop yields to the host between chunks — that is
+  the continuous-batching seam);
+* **retire** — converged (or iteration-capped) slots are read back, their
+  responses emitted, and the slot freed by setting its threshold to +inf
+  (a frozen row: every batched op is row-independent, so it costs one lane
+  row of flops and changes nothing).
+
+Because every batched operation reduces row-independently, a slot's iterate
+sequence is bitwise identical to a solo ``batch_cg`` on that one system —
+the acceptance property the parity tests pin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.batch import ops
+from repro.batch.formats import BatchCsr, BatchEll
+from repro.batch.solvers import (
+    BatchBicgstabState,
+    BatchCgState,
+    batch_bicgstab_advance,
+    batch_bicgstab_init,
+    batch_cg_advance,
+    batch_cg_init,
+)
+from repro.observability import convergence, metrics, trace
+from repro.precond import batch_block_jacobi_from_factors
+from repro.serve.cache import (
+    PatternSetup,
+    SetupCache,
+    pattern_key,
+    serve_generate_factors_op,
+    serve_generate_pattern_op,
+    values_fingerprint,
+)
+from repro.serve.request import SolveRequest, SolveResponse
+from repro.solvers.common import Stop
+
+__all__ = ["ServeConfig", "PatternLane", "ContinuousBatchEngine"]
+
+#: sweep cap handed to the chunked advance — per-request iteration limits are
+#: enforced host-side at retire (the lane's global sweep counter never stops
+#: the loop; ``num_sweeps`` bounds each chunk instead)
+_UNBOUNDED_ITERS = (1 << 31) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine configuration (fixed per engine; baked into jit closures)."""
+
+    slots: int = 8
+    chunk_sweeps: int = 8
+    solver: str = "cg"  # cg | bicgstab
+    fmt: str = "csr"  # csr | ell
+    precond: str = "block_jacobi"  # block_jacobi | none
+    block_size: int = 4
+    stop: Stop = Stop(max_iters=500, reduction_factor=1e-5)
+    cache_patterns: int = 32
+    cache_factors: int = 8
+
+    def pattern_config(self) -> str:
+        """The config part of the pattern-cache key: everything that changes
+        the generated tables/layout maps (solver/stop live in closure keys —
+        they do not affect the pattern tier's products)."""
+        return f"{self.fmt}|{self.precond}|bs{self.block_size}"
+
+    def closure_key(self):
+        return (self.slots, self.solver, self.chunk_sweeps, self.stop)
+
+
+def _zero_state(solver: str, S: int, n: int, dtype):
+    """Host-built all-frozen state for a fresh lane (no dispatches)."""
+    z2 = jnp.zeros((S, n), dtype)
+    z1 = jnp.zeros((S,), dtype)
+    it = jnp.zeros((S,), jnp.int32)
+    hist = convergence.init(0, batch=S, dtype=dtype)
+    if solver == "cg":
+        return BatchCgState(z2, z2, z2, z2, z1, it, jnp.int32(0), z1, hist)
+    if solver == "bicgstab":
+        return BatchBicgstabState(z2, z2, z2, z2, z1, it, jnp.int32(0), z1,
+                                  hist)
+    raise ValueError(f"unknown serve solver {solver!r} (cg | bicgstab)")
+
+
+def _build_closures(setup: PatternSetup, config: ServeConfig, ex):
+    """jit-compiled (refresh, advance) pair for one (pattern, config).
+
+    Stored in the pattern's cache entry, so repeat-pattern traffic reuses the
+    compiled XLA executables along with the tables — compilation is part of
+    what the setup cache amortizes.
+    """
+    run_stop = dataclasses.replace(config.stop, max_iters=_UNBOUNDED_ITERS)
+    shape = setup.shape
+
+    if setup.fmt == "csr":
+        indptr = jnp.asarray(setup.indptr, jnp.int32)
+        indices = jnp.asarray(setup.indices, jnp.int32)
+
+        def mk_A(values):
+            return BatchCsr(indptr, indices, values, shape)
+    else:
+        col_idx = setup.col_idx
+        m, kk = col_idx.shape
+
+        def mk_A(values):
+            return BatchEll(col_idx, values.reshape(-1, m, kk), shape)
+
+    def mk_M(inv, S):
+        if setup.jacobi is None:
+            return None
+        return batch_block_jacobi_from_factors(inv, S, setup.jacobi,
+                                               executor=ex)
+
+    cg = config.solver == "cg"
+
+    @jax.jit
+    def refresh(values, inv, B, state, thresh, newly):
+        """Recompute init state + threshold for the ``newly`` admitted rows."""
+        A = mk_A(values)
+        M = mk_M(inv, values.shape[0])
+        bnorm = ops.batch_norm2(B, executor=ex)
+        fresh_thresh = config.stop.threshold(bnorm)
+        n2 = newly[:, None]
+        if cg:
+            init = batch_cg_init(A, B, jnp.zeros_like(B), M=M, executor=ex)
+            state = BatchCgState(
+                X=jnp.where(n2, init.X, state.X),
+                R=jnp.where(n2, init.R, state.R),
+                Z=jnp.where(n2, init.Z, state.Z),
+                P=jnp.where(n2, init.P, state.P),
+                rz=jnp.where(newly, init.rz, state.rz),
+                iters=jnp.where(newly, init.iters, state.iters),
+                k=state.k,
+                rnorm=jnp.where(newly, init.rnorm, state.rnorm),
+                hist=state.hist,
+            )
+        else:
+            init = batch_bicgstab_init(A, B, jnp.zeros_like(B), executor=ex)
+            state = BatchBicgstabState(
+                X=jnp.where(n2, init.X, state.X),
+                R=jnp.where(n2, init.R, state.R),
+                R_hat=jnp.where(n2, init.R_hat, state.R_hat),
+                P=jnp.where(n2, init.P, state.P),
+                rho=jnp.where(newly, init.rho, state.rho),
+                iters=jnp.where(newly, init.iters, state.iters),
+                k=state.k,
+                rnorm=jnp.where(newly, init.rnorm, state.rnorm),
+                hist=state.hist,
+            )
+        return state, jnp.where(newly, fresh_thresh, thresh)
+
+    @jax.jit
+    def advance(values, inv, state, thresh):
+        A = mk_A(values)
+        M = mk_M(inv, values.shape[0])
+        step = batch_cg_advance if cg else batch_bicgstab_advance
+        return step(A, state, thresh, stop=run_stop, M=M,
+                    num_sweeps=config.chunk_sweeps, executor=ex)
+
+    return refresh, advance
+
+
+class PatternLane:
+    """Batch slots + solver state for one sparsity pattern."""
+
+    def __init__(self, setup: PatternSetup, config: ServeConfig, executor):
+        S = config.slots
+        n = setup.n
+        dtype = jnp.float32
+        self.setup = setup
+        self.config = config
+        self.executor = executor
+        self.values = jnp.zeros((S, setup.flat_value_len), dtype)
+        self.B = jnp.zeros((S, n), dtype)
+        if setup.jacobi is not None:
+            nbl, bs = setup.jacobi.num_blocks, setup.jacobi.block_size
+            self.inv = jnp.zeros((S * nbl, bs, bs), dtype)
+        else:
+            self.inv = jnp.zeros((0, 1, 1), dtype)
+        self.thresh = jnp.full((S,), jnp.inf, dtype)
+        self.state = _zero_state(config.solver, S, n, dtype)
+        self.requests: List[Optional[SolveRequest]] = [None] * S
+        self.pending: "deque[SolveRequest]" = deque()
+        ckey = config.closure_key()
+        if ckey not in setup.closures:
+            setup.closures[ckey] = _build_closures(setup, config, executor)
+        self.refresh_fn, self.advance_fn = setup.closures[ckey]
+
+    @property
+    def occupied(self) -> int:
+        return sum(r is not None for r in self.requests)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending) or self.occupied > 0
+
+
+class ContinuousBatchEngine:
+    """Deterministic host loop: ``submit()`` requests, ``tick()`` the lanes.
+
+    Single-threaded by design — the async boundary lives in
+    :class:`repro.serve.service.SolveService`; keeping the engine inline
+    makes the cache/parity behavior exactly reproducible in tests.
+    """
+
+    def __init__(
+        self,
+        config: ServeConfig = ServeConfig(),
+        *,
+        executor=None,
+        cache: Optional[SetupCache] = None,
+    ):
+        if executor is None:
+            from repro.core.executor import current_executor
+
+            executor = current_executor()
+        # fail fast on degenerate stopping criteria (instead of at trace time
+        # inside the first refresh)
+        config.stop.threshold(jnp.zeros((0,), jnp.float32))
+        self.config = config
+        self.executor = executor
+        self.cache = cache if cache is not None else SetupCache(
+            config.cache_patterns, config.cache_factors
+        )
+        self.lanes: Dict[str, PatternLane] = {}
+        self._ids = itertools.count()
+        #: request_id -> [pattern_hit, factors_hit]
+        self._flags: Dict[int, List[bool]] = {}
+
+    # -- intake ---------------------------------------------------------------
+    def submit(self, req: SolveRequest) -> int:
+        if req.request_id is None:
+            req.request_id = next(self._ids)
+        if req.submitted_s is None:
+            req.submitted_s = time.perf_counter()
+        key = pattern_key(req.indptr, req.indices, req.shape,
+                          self.config.pattern_config())
+        setup, hit = self.cache.setup(
+            key,
+            build=lambda: serve_generate_pattern_op(
+                req.indptr, req.indices, req.shape,
+                fmt=self.config.fmt,
+                precond=self.config.precond,
+                block_size=self.config.block_size,
+                executor=self.executor,
+            ),
+        )
+        lane = self.lanes.get(key)
+        if lane is None:
+            lane = self.lanes[key] = PatternLane(setup, self.config,
+                                                 self.executor)
+        elif lane.setup is not setup:
+            # the pattern was evicted and regenerated since this lane was
+            # built — rebind so closures/factors stay consistent
+            lane.setup = setup
+            ckey = self.config.closure_key()
+            if ckey not in setup.closures:
+                setup.closures[ckey] = _build_closures(setup, self.config,
+                                                       self.executor)
+            lane.refresh_fn, lane.advance_fn = setup.closures[ckey]
+        self._flags[req.request_id] = [hit, False]
+        lane.pending.append(req)
+        metrics.counter("serve_requests").inc()
+        return req.request_id
+
+    # -- the tick cycle -------------------------------------------------------
+    def tick(self) -> List[SolveResponse]:
+        """One admit -> advance -> retire cycle over every lane."""
+        responses: List[SolveResponse] = []
+        for lane in self.lanes.values():
+            self._admit(lane)
+        for lane in self.lanes.values():
+            if lane.occupied:
+                lane.state = lane.advance_fn(lane.values, lane.inv,
+                                             lane.state, lane.thresh)
+        for lane in self.lanes.values():
+            responses.extend(self._retire(lane))
+        metrics.gauge("serve_slots_occupied").set(
+            sum(lane.occupied for lane in self.lanes.values())
+        )
+        return responses
+
+    @property
+    def has_work(self) -> bool:
+        return any(lane.has_work for lane in self.lanes.values())
+
+    def drain(self, max_ticks: int = 100_000) -> List[SolveResponse]:
+        """Tick until every submitted request has retired."""
+        out: List[SolveResponse] = []
+        for _ in range(max_ticks):
+            if not self.has_work:
+                return out
+            out.extend(self.tick())
+        raise RuntimeError(
+            f"serve engine failed to drain within {max_ticks} ticks"
+        )
+
+    # -- internals ------------------------------------------------------------
+    def _admit(self, lane: PatternLane) -> None:
+        if not lane.pending:
+            return
+        S = self.config.slots
+        newly = np.zeros(S, bool)
+        for s in range(S):
+            if lane.requests[s] is not None or not lane.pending:
+                continue
+            req = lane.pending.popleft()
+            vals = lane.setup.lane_values(req.values)
+            lane.values = lane.values.at[s].set(
+                jnp.asarray(vals, lane.values.dtype)
+            )
+            lane.B = lane.B.at[s].set(jnp.asarray(req.b, lane.B.dtype))
+            if lane.setup.jacobi is not None:
+                fp = values_fingerprint(vals)
+                inv_rows, fhit = self.cache.factors(
+                    lane.setup, fp,
+                    build=lambda v=vals: serve_generate_factors_op(
+                        jnp.asarray(v, lane.values.dtype), lane.setup,
+                        executor=self.executor,
+                    ),
+                )
+                nbl = lane.setup.jacobi.num_blocks
+                lane.inv = lane.inv.at[s * nbl:(s + 1) * nbl].set(inv_rows)
+                self._flags[req.request_id][1] = fhit
+            req.admitted_s = time.perf_counter()
+            lane.requests[s] = req
+            newly[s] = True
+            trace.instant("serve.admit", slot=s, request=req.request_id,
+                          pattern=lane.setup.key[:12])
+        if newly.any():
+            lane.state, lane.thresh = lane.refresh_fn(
+                lane.values, lane.inv, lane.B, lane.state, lane.thresh,
+                jnp.asarray(newly),
+            )
+
+    def _retire(self, lane: PatternLane) -> List[SolveResponse]:
+        out: List[SolveResponse] = []
+        if not lane.occupied:
+            return out
+        rnorm = np.asarray(lane.state.rnorm)
+        th = np.asarray(lane.thresh)
+        iters = np.asarray(lane.state.iters)
+        max_iters = self.config.stop.max_iters
+        done = [
+            s for s, r in enumerate(lane.requests)
+            if r is not None and (rnorm[s] <= th[s] or iters[s] >= max_iters)
+        ]
+        if not done:
+            return out
+        X = np.asarray(lane.state.X)
+        tracer = trace.get_tracer()
+        now = time.perf_counter()
+        for s in done:
+            req = lane.requests[s]
+            flags = self._flags.pop(req.request_id, [False, False])
+            latency = (now - req.submitted_s
+                       if req.submitted_s is not None else None)
+            resp = SolveResponse(
+                request_id=req.request_id,
+                x=X[s].copy(),
+                iterations=int(iters[s]),
+                residual_norm=float(rnorm[s]),
+                converged=bool(rnorm[s] <= th[s]),
+                pattern_hit=flags[0],
+                factors_hit=flags[1],
+                latency_s=latency,
+                retired_s=now,
+            )
+            lane.requests[s] = None
+            lane.thresh = lane.thresh.at[s].set(jnp.inf)
+            metrics.counter("serve_solves").inc()
+            metrics.counter("serve_iterations").inc(resp.iterations)
+            if not resp.converged:
+                metrics.counter("serve_failures").inc()
+            if latency is not None:
+                metrics.histogram("serve_latency_s").observe(latency)
+            if tracer is not None and req.submitted_s is not None:
+                # retroactive request span: submit -> retire
+                tracer.complete(
+                    "serve.request",
+                    tracer.rel_us(req.submitted_s),
+                    (now - req.submitted_s) * 1e6,
+                    cat="serve",
+                    args={
+                        "request": req.request_id,
+                        "iterations": resp.iterations,
+                        "pattern_hit": flags[0],
+                        "factors_hit": flags[1],
+                        "converged": resp.converged,
+                    },
+                )
+            out.append(resp)
+        return out

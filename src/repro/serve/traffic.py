@@ -1,0 +1,124 @@
+"""Synthetic solve traffic: Poisson arrivals over a pattern gallery.
+
+Models the workload the setup cache exists for — a service receiving many
+small systems where sparsity patterns recur heavily (device simulation
+batches, time-stepping with fixed meshes): exponential inter-arrival gaps at
+``rate_hz``, patterns drawn from a gallery of ``gallery_size`` distinct SPD
+stencils, and ``repeat_ratio`` controlling how often a request reuses a
+previously issued (pattern, values) pair — with a fresh right-hand side, so
+repeats are real solves, not memoizable no-ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.serve.request import SolveRequest
+
+__all__ = ["TrafficConfig", "pattern_gallery", "generate_traffic"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    num_requests: int = 64
+    rate_hz: float = 500.0
+    gallery_size: int = 4
+    #: probability a request reuses a previously issued (pattern, values)
+    #: pair — these hit both cache tiers; non-repeats draw a gallery pattern
+    #: with fresh values (pattern-tier hit once the pattern has been seen)
+    repeat_ratio: float = 0.6
+    n: int = 24
+    seed: int = 0
+
+
+def _stencil(n: int, offsets: Tuple[int, ...], shift: float,
+             rng: np.random.Generator) -> Tuple[np.ndarray, np.ndarray,
+                                                np.ndarray]:
+    """Diagonally dominant SPD banded matrix as host CSR arrays.
+
+    Distinct ``offsets`` tuples give distinct sparsity patterns; ``shift``
+    and the random diagonal jitter vary the values within a pattern.
+    """
+    a = np.zeros((n, n), np.float32)
+    idx = np.arange(n)
+    a[idx, idx] = shift + rng.uniform(0.0, 0.5, size=n).astype(np.float32)
+    for off in offsets:
+        w = np.float32(-1.0 / off)
+        a[idx[off:], idx[:-off]] = w
+        a[idx[:-off], idx[off:]] = w
+    # diagonal dominance keeps every draw SPD
+    a[idx, idx] += np.abs(a).sum(axis=1).astype(np.float32)
+    nz = a != 0
+    indptr = np.zeros(n + 1, np.int64)
+    indptr[1:] = np.cumsum(nz.sum(axis=1))
+    indices = np.nonzero(nz)[1].astype(np.int32)
+    values = a[nz].astype(np.float32)
+    return indptr, indices, values
+
+
+#: off-diagonal offset sets — each a distinct sparsity pattern
+_OFFSETS = (
+    (1,),
+    (1, 2),
+    (1, 3),
+    (1, 2, 4),
+    (2,),
+    (1, 2, 3),
+    (1, 5),
+    (3,),
+)
+
+
+def pattern_gallery(cfg: TrafficConfig):
+    """``gallery_size`` distinct (indptr, indices) patterns with a values
+    generator per pattern."""
+    if cfg.gallery_size > len(_OFFSETS):
+        raise ValueError(
+            f"gallery_size {cfg.gallery_size} exceeds the {len(_OFFSETS)} "
+            "available distinct stencils"
+        )
+    rng = np.random.default_rng(cfg.seed)
+    gallery = []
+    for g in range(cfg.gallery_size):
+        offsets = _OFFSETS[g]
+        shift = 3.0 + g
+
+        def make_values(offsets=offsets, shift=shift):
+            return _stencil(cfg.n, offsets, shift, rng)
+
+        indptr, indices, _ = _stencil(cfg.n, offsets, shift,
+                                      np.random.default_rng(0))
+        gallery.append((indptr, indices, make_values))
+    return gallery
+
+
+def generate_traffic(
+    cfg: TrafficConfig,
+) -> List[Tuple[float, SolveRequest]]:
+    """``[(inter_arrival_gap_s, request), ...]`` — a Poisson request stream.
+
+    Deterministic for a given seed.  Right-hand sides are always fresh;
+    matrices repeat according to ``repeat_ratio``.
+    """
+    rng = np.random.default_rng(cfg.seed + 1)
+    gallery = pattern_gallery(cfg)
+    seen: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    out: List[Tuple[float, SolveRequest]] = []
+    for _ in range(cfg.num_requests):
+        gap = float(rng.exponential(1.0 / cfg.rate_hz))
+        if seen and rng.random() < cfg.repeat_ratio:
+            indptr, indices, values = seen[rng.integers(len(seen))]
+        else:
+            g = int(rng.integers(len(gallery)))
+            indptr, indices, _ = gallery[g][0], gallery[g][1], None
+            _, _, values = gallery[g][2]()
+            seen.append((indptr, indices, values))
+        b = rng.normal(size=cfg.n).astype(np.float32)
+        out.append((gap, SolveRequest(
+            indptr=indptr, indices=indices, values=values, b=b,
+            shape=(cfg.n, cfg.n),
+        )))
+    return out

@@ -1,0 +1,125 @@
+"""Degenerate batch shapes continuous batching hits constantly.
+
+The serve engine's admit/retire cycle routinely produces an empty batch (all
+slots drained between bursts), a single-system batch (one straggler), and a
+batch where every slot is already converged at entry (a chunked advance that
+landed exactly on convergence).  None of these may issue a zero-size kernel
+launch or run a vacuous while_loop sweep.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import batch, solvers
+from repro.core import XlaExecutor, use_executor
+
+from test_batch_solvers import STOP, spd_batch  # same shifted-tridiag suite
+
+SOLVERS = [batch.batch_cg, batch.batch_bicgstab]
+
+
+@pytest.mark.parametrize("solve", SOLVERS)
+def test_empty_batch_no_dispatches(solve):
+    stack, _, _ = spd_batch(nb=2, n=8)
+    A2 = batch.batch_csr_from_dense(stack)
+    A = batch.BatchCsr(A2.indptr, A2.indices, A2.values[:0], A2.shape)
+    B = jnp.zeros((0, 8), jnp.float32)
+    ex = XlaExecutor()
+    ex.dispatch_log.clear()
+    with use_executor(ex):
+        res = solve(A, B, stop=STOP)
+    assert res.x.shape == (0, 8)
+    assert res.iterations.shape == (0,)
+    assert res.converged.shape == (0,)
+    assert res.residual_norms.shape == (0,)
+    assert dict(ex.dispatch_log) == {}, "empty batch must not launch kernels"
+
+
+@pytest.mark.parametrize("solve", SOLVERS)
+def test_empty_batch_still_rejects_degenerate_stop(solve):
+    stack, _, _ = spd_batch(nb=1, n=8)
+    A1 = batch.batch_csr_from_dense(stack)
+    A = batch.BatchCsr(A1.indptr, A1.indices, A1.values[:0], A1.shape)
+    bad = solvers.Stop(max_iters=10, reduction_factor=0.0, abs_tol=0.0)
+    with pytest.raises(ValueError):
+        solve(A, jnp.zeros((0, 8), jnp.float32), stop=bad)
+
+
+@pytest.mark.parametrize("solve,single", [
+    (batch.batch_cg, solvers.cg),
+    (batch.batch_bicgstab, solvers.bicgstab),
+])
+def test_single_system_batch(solve, single):
+    nonsym = solve is batch.batch_bicgstab
+    stack, xstar, B = spd_batch(nb=1, n=16, nonsym=nonsym)
+    A = batch.batch_csr_from_dense(stack)
+    ex = XlaExecutor()
+    with use_executor(ex):
+        res = solve(A, jnp.asarray(B), stop=STOP)
+        ref = single(A.system(0), jnp.asarray(B[0]), stop=STOP)
+    assert bool(res.converged[0]) and bool(ref.converged)
+    np.testing.assert_allclose(np.asarray(res.x[0]), xstar[0],
+                               rtol=1e-3, atol=1e-3)
+    assert int(res.iterations[0]) == int(ref.iterations)
+
+
+@pytest.mark.parametrize("solve", SOLVERS)
+def test_all_converged_at_entry(solve):
+    """Exact X0 for every system: zero sweeps, X bitwise untouched."""
+    stack, xstar, B = spd_batch(nb=4, n=12)
+    A = batch.batch_csr_from_dense(stack)
+    X0 = jnp.asarray(xstar)
+    # B was built as A @ xstar in float32, so R = B - A X0 is exactly where
+    # the solver's own residual lands — rnorm is tiny but may not be zero;
+    # use a stop whose absolute tolerance clears it at entry.
+    stop = solvers.Stop(max_iters=50, reduction_factor=0.0, abs_tol=1e-2)
+    ex = XlaExecutor()
+    with use_executor(ex):
+        res = solve(A, jnp.asarray(B), X0=X0, stop=stop)
+    assert bool(jnp.all(res.converged))
+    assert np.array_equal(np.asarray(res.iterations), np.zeros(4, np.int32))
+    # frozen-at-entry systems ride through bitwise unchanged
+    assert np.array_equal(np.asarray(res.x), np.asarray(X0))
+
+
+def test_init_advance_composition_is_batch_cg():
+    """init + advance must reproduce batch_cg bitwise — the contract the
+    continuous-batching engine builds on."""
+    from repro.batch import ops as batch_ops
+
+    stack, _, B = spd_batch(nb=8, n=16)
+    A = batch.batch_csr_from_dense(stack)
+    ex = XlaExecutor()
+    B = jnp.asarray(B)
+    with use_executor(ex):
+        whole = batch.batch_cg(A, B, stop=STOP)
+        thresh = STOP.threshold(batch_ops.batch_norm2(B, executor=ex))
+        st = batch.batch_cg_init(A, B, jnp.zeros_like(B), executor=ex)
+        # chunked advance: several small sweeps instead of one long loop
+        for _ in range(25):
+            st = batch.batch_cg_advance(A, st, thresh, stop=STOP,
+                                        num_sweeps=4, executor=ex)
+    assert np.array_equal(np.asarray(whole.x), np.asarray(st.X))
+    assert np.array_equal(np.asarray(whole.iterations), np.asarray(st.iters))
+    assert np.array_equal(np.asarray(whole.residual_norms),
+                          np.asarray(st.rnorm))
+
+
+def test_init_advance_composition_is_batch_bicgstab():
+    from repro.batch import ops as batch_ops
+
+    stack, _, B = spd_batch(nb=6, n=16, nonsym=True)
+    A = batch.batch_csr_from_dense(stack)
+    ex = XlaExecutor()
+    B = jnp.asarray(B)
+    with use_executor(ex):
+        whole = batch.batch_bicgstab(A, B, stop=STOP)
+        thresh = STOP.threshold(batch_ops.batch_norm2(B, executor=ex))
+        st = batch.batch_bicgstab_init(A, B, jnp.zeros_like(B), executor=ex)
+        for _ in range(20):
+            st = batch.batch_bicgstab_advance(A, st, thresh, stop=STOP,
+                                              num_sweeps=5, executor=ex)
+    assert np.array_equal(np.asarray(whole.x), np.asarray(st.X))
+    assert np.array_equal(np.asarray(whole.iterations), np.asarray(st.iters))

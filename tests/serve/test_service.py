@@ -1,0 +1,72 @@
+"""Async service front end: the threaded boundary changes no outcomes."""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import XlaExecutor
+from repro.serve import (
+    ContinuousBatchEngine,
+    ServeConfig,
+    SolveService,
+    TrafficConfig,
+    generate_traffic,
+)
+from repro.solvers import Stop
+
+STOP = Stop(max_iters=200, reduction_factor=1e-5)
+CONFIG = ServeConfig(slots=4, chunk_sweeps=4, stop=STOP)
+
+
+def _traffic(num, seed=0):
+    return generate_traffic(TrafficConfig(
+        num_requests=num, gallery_size=2, repeat_ratio=0.5, n=16, seed=seed,
+    ))
+
+
+def test_submit_gather_round_trip():
+    traffic = _traffic(10, seed=11)
+    with SolveService(CONFIG, executor=XlaExecutor()) as svc:
+        ids = [svc.submit(req) for _, req in traffic]
+        responses = svc.gather(ids, timeout=120.0)
+    assert [r.request_id for r in responses] == ids
+    assert all(r.converged for r in responses)
+    assert all(r.latency_s is not None and r.latency_s > 0
+               for r in responses)
+
+
+def test_service_matches_inline_engine():
+    """The async queue is plumbing only: responses are bitwise the inline
+    engine's for the same submission order and configuration."""
+    traffic = _traffic(8, seed=12)
+    ex = XlaExecutor()
+    engine = ContinuousBatchEngine(CONFIG, executor=ex)
+    inline = {}
+    for _, req in traffic:
+        rid = engine.submit(copy.deepcopy(req))
+        inline[rid] = None
+    for resp in engine.drain():
+        inline[resp.request_id] = resp
+
+    with SolveService(CONFIG, executor=ex) as svc:
+        ids = [svc.submit(req) for _, req in traffic]
+        served = svc.gather(ids, timeout=120.0)
+    # service assigns its own ids starting at 0, same order as the engine's
+    for resp in served:
+        ref = inline[resp.request_id]
+        assert np.array_equal(resp.x, ref.x)
+        assert resp.iterations == ref.iterations
+
+
+def test_result_timeout():
+    with SolveService(CONFIG, executor=XlaExecutor()) as svc:
+        with pytest.raises(TimeoutError):
+            svc.result(10_000, timeout=0.05)
+
+
+def test_submit_before_start_raises():
+    svc = SolveService(CONFIG, executor=XlaExecutor())
+    (_, req), = _traffic(1, seed=13)
+    with pytest.raises(RuntimeError):
+        svc.submit(req)

@@ -1,0 +1,169 @@
+"""Setup-cache accounting, LRU order, and the cache-hit parity pins.
+
+The acceptance claims for the pattern-keyed setup cache:
+
+* hit/miss/eviction counters in the metrics registry agree with the lookup
+  sequence, per tier;
+* eviction follows LRU order (observable through ``SetupCache.keys``);
+* a cache-hit solve is **bitwise identical** to the cold solve that populated
+  the cache, and the dispatch log shows **zero** generation launches for it.
+"""
+
+import copy
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import XlaExecutor, use_executor
+from repro.observability import metrics
+from repro.serve import (
+    ContinuousBatchEngine,
+    PatternSetup,
+    ServeConfig,
+    SetupCache,
+    SolveRequest,
+    TrafficConfig,
+    generate_traffic,
+)
+from repro.solvers import Stop
+
+STOP = Stop(max_iters=200, reduction_factor=1e-5)
+
+
+def _stub_entry(tag: int) -> PatternSetup:
+    """Cheap pattern entry for pure LRU bookkeeping tests."""
+    n = 4
+    indptr = np.arange(n + 1, dtype=np.int64)
+    indices = np.full(n, tag % n, np.int64)
+    return PatternSetup(key="", indptr=indptr, indices=indices,
+                        shape=(n, n), fmt="csr")
+
+
+def test_pattern_tier_hit_miss_accounting():
+    metrics.reset()
+    cache = SetupCache(capacity=8)
+    for k in ("a", "b", "a", "c", "a", "b"):
+        cache.setup(k, build=lambda: _stub_entry(0))
+    stats = cache.stats()
+    assert stats["serve_cache_misses_pattern"] == 3  # a, b, c
+    assert stats["serve_cache_hits_pattern"] == 3  # a, a, b
+    assert stats["serve_cache_evictions_pattern"] == 0
+    # the counters are ordinary registry series, visible to samples()
+    assert metrics.counter("serve_cache_hits", tier="pattern").value == 3
+
+
+def test_pattern_tier_lru_eviction_order():
+    metrics.reset()
+    cache = SetupCache(capacity=2)
+    cache.setup("a", build=lambda: _stub_entry(0))
+    cache.setup("b", build=lambda: _stub_entry(1))
+    assert cache.keys == ("a", "b")
+    # touching `a` makes `b` the LRU victim
+    _, hit = cache.setup("a", build=lambda: _stub_entry(0))
+    assert hit
+    cache.setup("c", build=lambda: _stub_entry(2))  # evicts b
+    assert cache.keys == ("a", "c")
+    assert "b" not in cache
+    assert cache.stats()["serve_cache_evictions_pattern"] == 1
+    # re-adding b is a miss again and evicts a (now LRU)
+    _, hit = cache.setup("b", build=lambda: _stub_entry(1))
+    assert not hit
+    assert cache.keys == ("c", "b")
+
+
+def test_values_tier_lru_and_accounting():
+    metrics.reset()
+    cache = SetupCache(capacity=4, factors_capacity=2)
+    entry, _ = cache.setup("p", build=lambda: _stub_entry(0))
+    mk = lambda v: jnp.full((1, 2, 2), float(v))
+    cache.factors(entry, "f1", build=lambda: mk(1))
+    cache.factors(entry, "f2", build=lambda: mk(2))
+    inv, hit = cache.factors(entry, "f1", build=lambda: mk(-1))
+    assert hit and float(inv[0, 0, 0]) == 1.0  # cached, not rebuilt
+    cache.factors(entry, "f3", build=lambda: mk(3))  # evicts f2 (LRU)
+    assert tuple(entry.factors) == ("f1", "f3")
+    stats = cache.stats()
+    assert stats["serve_cache_misses_values"] == 3
+    assert stats["serve_cache_hits_values"] == 1
+    assert stats["serve_cache_evictions_values"] == 1
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError):
+        SetupCache(capacity=0)
+    with pytest.raises(ValueError):
+        SetupCache(capacity=4, factors_capacity=0)
+
+
+def _one_request(seed: int) -> SolveRequest:
+    cfg = TrafficConfig(num_requests=1, gallery_size=1, repeat_ratio=0.0,
+                        n=16, seed=seed)
+    return generate_traffic(cfg)[0][1]
+
+
+def test_cache_hit_solve_bitwise_identical_to_cold():
+    """The central pin: a warmed cache changes *nothing* about the numerics —
+    the hit request skips generation entirely (zero ``serve_generate_*``
+    dispatches) and produces a bitwise-identical solution."""
+    metrics.reset()
+    ex = XlaExecutor()
+    config = ServeConfig(slots=4, chunk_sweeps=3, stop=STOP)
+    req = _one_request(0)
+
+    cold = ContinuousBatchEngine(config, executor=ex)
+    cold.submit(copy.deepcopy(req))
+    (r_cold,) = cold.drain()
+    assert r_cold.converged
+    assert not r_cold.pattern_hit and not r_cold.factors_hit
+
+    # fresh engine, shared (warm) cache: both tiers hit, no generation runs
+    warm = ContinuousBatchEngine(config, executor=ex, cache=cold.cache)
+    ex.dispatch_log.clear()
+    warm.submit(copy.deepcopy(req))
+    (r_warm,) = warm.drain()
+    log = dict(ex.dispatch_log)
+    assert r_warm.pattern_hit and r_warm.factors_hit
+    assert log.get("serve_generate_pattern", 0) == 0
+    assert log.get("serve_generate_factors", 0) == 0
+    assert np.array_equal(r_cold.x, r_warm.x)
+    assert r_cold.iterations == r_warm.iterations
+    assert r_cold.residual_norm == r_warm.residual_norm
+
+
+def test_cold_request_logs_generation_dispatches():
+    """Cold path control for the pin above: misses *do* launch generation."""
+    metrics.reset()
+    ex = XlaExecutor()
+    engine = ContinuousBatchEngine(
+        ServeConfig(slots=2, chunk_sweeps=4, stop=STOP), executor=ex
+    )
+    ex.dispatch_log.clear()
+    engine.submit(_one_request(3))
+    engine.drain()
+    log = dict(ex.dispatch_log)
+    assert log.get("serve_generate_pattern", 0) == 1
+    assert log.get("serve_generate_factors", 0) == 1
+
+
+def test_engine_traffic_hit_accounting():
+    """Under repeat-heavy traffic the cache hit counters must line up with
+    the per-response hit flags."""
+    metrics.reset()
+    ex = XlaExecutor()
+    config = ServeConfig(slots=4, chunk_sweeps=4, stop=STOP)
+    engine = ContinuousBatchEngine(config, executor=ex)
+    traffic = generate_traffic(TrafficConfig(
+        num_requests=16, gallery_size=2, repeat_ratio=0.6, n=16, seed=1,
+    ))
+    for _, req in traffic:
+        engine.submit(req)
+    responses = engine.drain()
+    assert len(responses) == 16
+    p_hits = sum(r.pattern_hit for r in responses)
+    f_hits = sum(r.factors_hit for r in responses)
+    stats = engine.cache.stats()
+    assert stats["serve_cache_hits_pattern"] == p_hits
+    assert stats["serve_cache_misses_pattern"] == 16 - p_hits
+    assert stats["serve_cache_hits_values"] == f_hits
+    assert p_hits > 0 and f_hits > 0  # repeat traffic actually hits
