@@ -1,0 +1,1 @@
+"""SpGEMM expansion + CSR permutation Pallas kernels."""

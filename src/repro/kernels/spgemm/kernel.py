@@ -1,0 +1,118 @@
+"""SpGEMM numeric-expansion + CSR-permutation Pallas TPU kernels.
+
+SpGEMM (C = A·B for CSR operands) splits into a host structure pass and a
+flop-carrying numeric pass (see :mod:`repro.sparse.ops`).  The numeric pass is
+what these kernels accelerate:
+
+* ``spgemm_expand`` — the expansion multiply.  Entry t of A contributes
+  ``a_vals[t] · B.values[idx[t, q]]`` for each of up to K entries of B's row
+  ``A.indices[t]``; the host pass flattens that into a rectangular gather map
+  ``idx`` of shape (T, K) whose indices are +1-shifted into a zero-padded copy
+  of B's values, so padding slots gather slot 0 and contribute exactly 0 — the
+  predication-free padding idiom from the ELL kernels.  Each (block_t, block_k)
+  tile is an independent gather-multiply against the VMEM-resident padded
+  value vector; there is no cross-tile accumulation, so the grid is
+  embarrassingly parallel.
+
+* ``csr_permute`` — the transpose value shuffle: ``out[t] = values[order[t]]``
+  with ``order`` the host-computed column-major permutation.  One gather per
+  tile against the VMEM-resident source vector.
+
+Both kernels keep the *data-dependent* parts (structure, sort order) on the
+host where they are computed once per pattern, and stream the value-dependent
+arithmetic through VMEM tiles — the split that lets the serve layer reuse
+structure across value refreshes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spgemm_expand_kernel(a_ref, idx_ref, bpad_ref, o_ref):
+    a = a_ref[...]  # (block_t,)
+    idx = idx_ref[...]  # (block_t, block_k), +1-shifted, 0 = padding
+    bpad = bpad_ref[...]  # (nnzb + 1,), slot 0 is the zero pad
+    o_ref[...] = a[:, None] * bpad[idx]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_k", "interpret")
+)
+def spgemm_expand(
+    a_vals: jax.Array,
+    idx: jax.Array,
+    b_pad: jax.Array,
+    *,
+    block_t: int = 256,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Expansion products ``a_vals[:, None] * b_pad[idx]`` of shape (T, K).
+
+    ``idx`` is +1-shifted into ``b_pad`` (whose slot 0 holds 0.0), so padded
+    lanes contribute zero without predication.
+    """
+    t, k = idx.shape
+    nb1 = b_pad.shape[0]
+
+    block_t = max(min(block_t, t), 1)
+    block_k = max(min(block_k, k), 1)
+    pt = ((t + block_t - 1) // block_t) * block_t
+    pk = ((k + block_k - 1) // block_k) * block_k
+    if (pt, pk) != (t, k):
+        idx = jnp.pad(idx, ((0, pt - t), (0, pk - k)))
+    if pt != t:
+        a_vals = jnp.pad(a_vals, (0, pt - t))
+
+    out = pl.pallas_call(
+        _spgemm_expand_kernel,
+        grid=(pt // block_t, pk // block_k),
+        in_specs=[
+            pl.BlockSpec((block_t,), lambda i, j: (i,)),
+            pl.BlockSpec((block_t, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec((nb1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_k), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pt, pk), b_pad.dtype),
+        interpret=interpret,
+    )(a_vals, idx, b_pad)
+    return out[:t, :k]
+
+
+def _csr_permute_kernel(v_ref, ord_ref, o_ref):
+    o_ref[...] = v_ref[...][ord_ref[...]]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def csr_permute(
+    values: jax.Array,
+    order: jax.Array,
+    *,
+    block_t: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """``values[order]`` — the transpose value shuffle, tiled over ``order``."""
+    nnz = values.shape[0]
+    t = order.shape[0]
+    block_t = max(min(block_t, t), 1)
+    pt = ((t + block_t - 1) // block_t) * block_t
+    if pt != t:
+        order = jnp.pad(order, (0, pt - t))
+
+    out = pl.pallas_call(
+        _csr_permute_kernel,
+        grid=(pt // block_t,),
+        in_specs=[
+            pl.BlockSpec((nnz,), lambda i: (0,)),
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pt,), values.dtype),
+        interpret=interpret,
+    )(values, order)
+    return out[:t]

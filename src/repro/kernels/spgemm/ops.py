@@ -1,0 +1,145 @@
+"""Registry binding: Pallas SpGEMM expansion + transpose permutation.
+
+The pallas space shares the host structure pass (row-nnz upper bound,
+expansion maps, coalesce) with the reference/xla spaces — see
+:mod:`repro.sparse.ops` — and replaces only the flop-carrying numeric pass
+with the tiled kernels from :mod:`repro.kernels.spgemm.kernel`.  Geometry
+resolves through ``Executor.launch_config`` against the ``spgemm``
+:class:`~repro.core.tuning.TuningSpec` below (one spec for the family: the
+permutation kernel reuses ``block_t``).  When the working set exceeds VMEM
+the skeletons fall back to the xla formulations — graceful degradation, the
+same contract as every kernel family.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import registry, tuning
+from repro.kernels.spgemm.kernel import csr_permute, spgemm_expand
+from repro.sparse.formats import Csr, csr_from_arrays
+
+
+def _vmem_bytes(shapes, block) -> int:
+    # idx tile (int32) + product tile, a-value tile, padded B values resident
+    bt, bk = block["block_t"], block["block_k"]
+    itemsize = shapes.get("itemsize", 4)
+    nnzb = shapes.get("nnzb", 0)
+    return bt * bk * (4 + itemsize) + bt * itemsize + (nnzb + 1) * itemsize
+
+
+def _constrain(hw, shapes, block):
+    bt = max(int(block["block_t"]), hw.sublane_count)
+    bt -= bt % hw.sublane_count
+    bk = tuning.prev_pow2(max(int(block["block_k"]), 8))
+    return {"block_t": bt, "block_k": bk}
+
+
+SPGEMM_SPEC = tuning.register_spec(
+    tuning.TuningSpec(
+        op="spgemm",
+        params=("block_t", "block_k"),
+        seed=lambda hw: {
+            "block_t": max(hw.sublane_count * 32, 8),
+            "block_k": hw.lane_count,
+        },
+        vmem_bytes=_vmem_bytes,
+        constrain=_constrain,
+        floors={"block_t": 8, "block_k": 8},
+        candidates=lambda hw, shapes: [
+            {"block_t": bt, "block_k": bk}
+            for bt in (
+                hw.sublane_count * 16,
+                hw.sublane_count * 32,
+                hw.sublane_count * 64,
+            )
+            for bk in (hw.lane_count // 2, hw.lane_count)
+        ],
+    )
+)
+
+
+def _spgemm_skeleton(ex, A: Csr, B: Csr, *, variant: str) -> Csr:
+    from repro.sparse.ops import (
+        _empty_csr,
+        _finalize_spgemm,
+        _spgemm_maps,
+        _spgemm_xla,
+    )
+
+    m = A.shape[0]
+    n = B.shape[1]
+    rows_a, b_start, b_len, K = _spgemm_maps(A, B)
+    if K == 0 or rows_a.size == 0:
+        return _empty_csr(m, n, np.result_type(A.dtype, B.dtype))
+    cfg = ex.launch_config(
+        "spgemm",
+        {
+            "t": rows_a.size,
+            "k": K,
+            "nnzb": B.nnz,
+            "itemsize": B.values.dtype.itemsize,
+        },
+    )
+    if not cfg.fits_vmem:
+        return _spgemm_xla(ex, A, B)
+    q = np.arange(K)
+    valid = q[None, :] < b_len[:, None]  # (nnzA, K) host bool
+    # +1-shift into the zero-padded value vector: padding gathers 0.0
+    idx1 = np.where(valid, b_start[:, None] + q[None, :] + 1, 0).astype(
+        np.int32
+    )
+    b_pad = jnp.concatenate(
+        [jnp.zeros(1, B.values.dtype), B.values]
+    )
+    prod = spgemm_expand(
+        A.values,
+        jnp.asarray(idx1),
+        b_pad,
+        block_t=cfg["block_t"],
+        block_k=cfg["block_k"],
+        interpret=ex.interpret,
+    )
+    # output columns are structure — computed host-side from the same maps
+    bc_pad = np.concatenate([np.zeros(1, np.int64), np.asarray(B.indices)])
+    cols = bc_pad[idx1]
+    return _finalize_spgemm(rows_a, K, valid, cols, prod, m, n)
+
+
+def _sptranspose_skeleton(ex, A: Csr, *, variant: str) -> Csr:
+    from repro.sparse.ops import _sptranspose_xla
+
+    m, n = A.shape
+    nnz = A.nnz
+    cfg = ex.launch_config(
+        "spgemm",
+        {"t": nnz, "k": 1, "nnzb": nnz, "itemsize": A.values.dtype.itemsize},
+    )
+    if not cfg.fits_vmem:
+        return _sptranspose_xla(ex, A)
+    # host structure pass: the column-major permutation and transposed indptr
+    ai = np.asarray(A.indptr)
+    cols = np.asarray(A.indices)
+    rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(ai))
+    order = np.lexsort((rows, cols)).astype(np.int32)
+    indptr = np.zeros(n + 1, np.int64)
+    indptr[1:] = np.cumsum(np.bincount(cols, minlength=n))
+    # device value shuffle through the tiled permutation kernel
+    vals = csr_permute(
+        A.values,
+        jnp.asarray(order),
+        block_t=cfg["block_t"],
+        interpret=ex.interpret,
+    )
+    return csr_from_arrays(
+        indptr, rows[order].astype(np.int32), vals, (n, m)
+    )
+
+
+registry.instantiate_common(
+    "spgemm", _spgemm_skeleton, {"pallas": dict(variant="pallas")}
+)
+registry.instantiate_common(
+    "sptranspose", _sptranspose_skeleton, {"pallas": dict(variant="pallas")}
+)

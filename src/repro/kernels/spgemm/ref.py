@@ -1,0 +1,18 @@
+"""Pure-jnp oracles for the SpGEMM kernel family."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spgemm_expand_ref(
+    a_vals: jax.Array, idx: jax.Array, b_pad: jax.Array
+) -> jax.Array:
+    """Expansion products: ``a_vals[:, None] * b_pad[idx]``."""
+    return a_vals[:, None] * b_pad[idx]
+
+
+def csr_permute_ref(values: jax.Array, order: jax.Array) -> jax.Array:
+    """Permutation gather: ``values[order]``."""
+    return jnp.asarray(values)[order]

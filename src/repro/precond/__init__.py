@@ -45,14 +45,21 @@ __all__ = [
     "uniform_block_ptrs",
     "unit_roundoff",
     "make_preconditioner",
+    "Multigrid",
+    "amg_preconditioner",
 ]
+
+from repro.precond.amg import Multigrid, amg_preconditioner  # noqa: E402
 
 
 def make_preconditioner(A, kind: str, *, executor=None, **opts):
     """Resolve a preconditioner by name — the solvers' ``M=<str>`` path.
 
     Kinds: ``identity``, ``jacobi`` (scalar), ``block_jacobi`` (accepts
-    ``block_size``/``blocks``/``adaptive``/``tau``), ``parilu``.
+    ``block_size``/``blocks``/``adaptive``/``tau``), ``parilu``, ``amg``
+    (smoothed-aggregation multigrid; accepts ``theta``/``cycle``/
+    ``smoother``/``coarse_solver``/... — see
+    :class:`repro.precond.amg.Multigrid`).
     """
     if kind == "identity":
         if opts:
@@ -72,7 +79,11 @@ def make_preconditioner(A, kind: str, *, executor=None, **opts):
         from repro.solvers.parilu import parilu_preconditioner
 
         return parilu_preconditioner(A, **opts)
+    if kind == "amg":
+        from repro.precond.amg import amg_preconditioner
+
+        return amg_preconditioner(A, executor=executor, **opts)
     raise KeyError(
         f"unknown preconditioner kind {kind!r}; known: "
-        "identity, jacobi, block_jacobi, parilu"
+        "identity, jacobi, block_jacobi, parilu, amg"
     )

@@ -9,9 +9,10 @@ products are cached in two tiers:
   block pointers, value-slot tables, ELL layout maps, gather indices, and
   (via the engine) the jit-compiled solver closures.  Keyed by
   :func:`pattern_key`, a hash over ``(indptr, indices, shape, config)``.
-* **values tier** — the numeric factors (inverted block-Jacobi blocks) for
-  one concrete value set, keyed inside its pattern entry by
-  :func:`values_fingerprint`.
+* **values tier** — the numeric factors for one concrete value set, keyed
+  inside its pattern entry by :func:`values_fingerprint`: inverted
+  block-Jacobi blocks, ParILU sweep factors ``[L | U]``, or the AMG two-level
+  row ``[inv_diag | A_c⁻¹]`` depending on the lane's preconditioner.
 
 Generation itself runs through *registered operations*
 (``serve_generate_pattern`` / ``serve_generate_factors``) — the analogue of
@@ -41,6 +42,13 @@ from repro.precond import (
     batch_block_jacobi_factors,
     batch_block_jacobi_pattern,
 )
+from repro.precond.amg import (
+    AmgServePattern,
+    amg_serve_factors,
+    amg_serve_pattern,
+)
+from repro.solvers.parilu import ParILUStructure, parilu_factorize, parilu_setup
+from repro.sparse.formats import csr_from_arrays
 
 __all__ = [
     "PatternSetup",
@@ -93,9 +101,16 @@ class PatternSetup:
     #: block-Jacobi pattern tier (slot tables, gather maps); None when the
     #: lane runs unpreconditioned
     jacobi: Optional[BatchBlockJacobiPattern] = None
+    #: ParILU sparsity analysis (L/U patterns, dependency tables); None unless
+    #: the lane preconditions with ``parilu``
+    parilu: Optional[ParILUStructure] = None
+    #: AMG two-level hierarchy (aggregation + Galerkin maps); None unless the
+    #: lane preconditions with ``amg``
+    amg: Optional[AmgServePattern] = None
     #: engine-owned: jit-compiled refresh/advance closures per (slots, solver)
     closures: Dict[Any, Any] = dataclasses.field(default_factory=dict)
-    #: values-tier LRU: values_fingerprint -> inverted factors (nblocks, bs, bs)
+    #: values-tier LRU: values_fingerprint -> factors — (nblocks, bs, bs)
+    #: inverted blocks for block-Jacobi, a flat row for parilu/amg
     factors: "OrderedDict[str, jax.Array]" = dataclasses.field(
         default_factory=OrderedDict
     )
@@ -123,6 +138,34 @@ class PatternSetup:
             out[self.ell_map] = np.asarray(values)
             return out
         return np.asarray(values)
+
+    def csr_values(self, flat):
+        """The lane's flat value row -> CSR-order values (factorize input)."""
+        if self.fmt == "ell":
+            return flat[jnp.asarray(self.ell_map)]
+        return flat
+
+    @property
+    def has_factors(self) -> bool:
+        """Whether this lane carries values-tier factors at all."""
+        return (
+            self.jacobi is not None
+            or self.parilu is not None
+            or self.amg is not None
+        )
+
+    @property
+    def flat_factor_len(self) -> Optional[int]:
+        """Per-system factor-row length for the 2-D factor lanes.
+
+        ``None`` for block-Jacobi (whose factors are ``(nblocks, bs, bs)``
+        stacks) and for unpreconditioned lanes.
+        """
+        if self.parilu is not None:
+            return int(self.parilu.l_rows.size + self.parilu.u_rows.size)
+        if self.amg is not None:
+            return int(self.amg.flat_len)
+        return None
 
 
 # =============================================================================
@@ -187,12 +230,19 @@ def _generate_pattern_ref(
     else:
         raise ValueError(f"unknown lane format {fmt!r} (csr | ell)")
 
-    jacobi = None
+    jacobi = parilu = amg = None
     if precond == "block_jacobi":
         jacobi = batch_block_jacobi_pattern(proto, block_size, executor=ex)
+    elif precond == "parilu":
+        parilu = parilu_setup(csr_from_arrays(
+            indptr, indices, np.zeros(indices.size, np.float32), shape
+        ))
+    elif precond == "amg":
+        amg = amg_serve_pattern(indptr, indices, m)
     elif precond != "none":
         raise ValueError(
-            f"unknown serve preconditioner {precond!r} (none | block_jacobi)"
+            f"unknown serve preconditioner {precond!r} "
+            "(none | block_jacobi | parilu | amg)"
         )
 
     return PatternSetup(
@@ -204,21 +254,35 @@ def _generate_pattern_ref(
         col_idx=col_idx,
         ell_map=ell_map,
         jacobi=jacobi,
+        parilu=parilu,
+        amg=amg,
     )
 
 
 @serve_generate_factors_op.register("reference")
 def _generate_factors_ref(ex, values: jax.Array, setup: PatternSetup):
-    """Inverted block-Jacobi factors ``(nblocks, bs, bs)`` for one system.
+    """Values-tier factors for one system's flat lane-layout value row.
 
-    ``values`` is the system's flat lane-layout value row; the slot gather
-    and Gauss-Jordan inversion are the shared tier-2 helpers, so a factor
-    built here is bitwise the one :func:`repro.precond.batch_block_jacobi`
-    builds inside a cold solve.
+    * block-Jacobi: inverted blocks ``(nblocks, bs, bs)`` — the slot gather
+      and Gauss-Jordan inversion are the shared tier-2 helpers, so a factor
+      built here is bitwise the one :func:`repro.precond.batch_block_jacobi`
+      builds inside a cold solve;
+    * parilu: the Chow–Patel sweep factors, flattened to ``[L | U]``;
+    * amg: the two-level row ``[inv_diag | A_c⁻¹]`` from
+      :func:`repro.precond.amg.amg_serve_factors` — hierarchy maps come from
+      the pattern tier, so a refresh is gathers + one segment-sum.
     """
-    return batch_block_jacobi_factors(
-        jnp.asarray(values)[None, :], setup.jacobi
-    )
+    values = jnp.asarray(values)
+    if setup.jacobi is not None:
+        return batch_block_jacobi_factors(values[None, :], setup.jacobi)
+    csr_vals = setup.csr_values(values)
+    if setup.parilu is not None:
+        A = csr_from_arrays(setup.indptr, setup.indices, csr_vals, setup.shape)
+        l_vals, u_vals, _ = parilu_factorize(A, setup.parilu)
+        return jnp.concatenate([l_vals, u_vals])
+    if setup.amg is not None:
+        return amg_serve_factors(setup.amg, csr_vals)
+    raise ValueError("lane has no preconditioner — no factors to generate")
 
 
 # =============================================================================

@@ -49,6 +49,8 @@ from repro.batch.solvers import (
 )
 from repro.observability import convergence, metrics, trace
 from repro.precond import batch_block_jacobi_from_factors
+from repro.precond.amg import batch_amg_apply
+from repro.solvers.parilu import batch_parilu_apply
 from repro.serve.cache import (
     PatternSetup,
     SetupCache,
@@ -76,7 +78,7 @@ class ServeConfig:
     chunk_sweeps: int = 8
     solver: str = "cg"  # cg | bicgstab
     fmt: str = "csr"  # csr | ell
-    precond: str = "block_jacobi"  # block_jacobi | none
+    precond: str = "block_jacobi"  # block_jacobi | parilu | amg | none
     block_size: int = 4
     stop: Stop = Stop(max_iters=500, reduction_factor=1e-5)
     cache_patterns: int = 32
@@ -130,10 +132,17 @@ def _build_closures(setup: PatternSetup, config: ServeConfig, ex):
             return BatchEll(col_idx, values.reshape(-1, m, kk), shape)
 
     def mk_M(inv, S):
-        if setup.jacobi is None:
-            return None
-        return batch_block_jacobi_from_factors(inv, S, setup.jacobi,
-                                               executor=ex)
+        if setup.jacobi is not None:
+            return batch_block_jacobi_from_factors(inv, S, setup.jacobi,
+                                                   executor=ex)
+        if setup.parilu is not None:
+            st = setup.parilu
+            nl = int(st.l_rows.size)
+            return lambda R: batch_parilu_apply(st, inv[:, :nl], inv[:, nl:],
+                                                R)
+        if setup.amg is not None:
+            return lambda R: batch_amg_apply(setup.amg, inv, R)
+        return None
 
     cg = config.solver == "cg"
 
@@ -199,6 +208,9 @@ class PatternLane:
         if setup.jacobi is not None:
             nbl, bs = setup.jacobi.num_blocks, setup.jacobi.block_size
             self.inv = jnp.zeros((S * nbl, bs, bs), dtype)
+        elif setup.flat_factor_len is not None:
+            # parilu / amg lanes store one flat factor row per slot
+            self.inv = jnp.zeros((S, setup.flat_factor_len), dtype)
         else:
             self.inv = jnp.zeros((0, 1, 1), dtype)
         self.thresh = jnp.full((S,), jnp.inf, dtype)
@@ -334,7 +346,7 @@ class ContinuousBatchEngine:
                 jnp.asarray(vals, lane.values.dtype)
             )
             lane.B = lane.B.at[s].set(jnp.asarray(req.b, lane.B.dtype))
-            if lane.setup.jacobi is not None:
+            if lane.setup.has_factors:
                 fp = values_fingerprint(vals)
                 inv_rows, fhit = self.cache.factors(
                     lane.setup, fp,
@@ -343,8 +355,11 @@ class ContinuousBatchEngine:
                         executor=self.executor,
                     ),
                 )
-                nbl = lane.setup.jacobi.num_blocks
-                lane.inv = lane.inv.at[s * nbl:(s + 1) * nbl].set(inv_rows)
+                if lane.setup.jacobi is not None:
+                    nbl = lane.setup.jacobi.num_blocks
+                    lane.inv = lane.inv.at[s * nbl:(s + 1) * nbl].set(inv_rows)
+                else:
+                    lane.inv = lane.inv.at[s].set(inv_rows)
                 self._flags[req.request_id][1] = fhit
             req.admitted_s = time.perf_counter()
             lane.requests[s] = req

@@ -17,6 +17,7 @@ from typing import List, Tuple
 import numpy as np
 
 from repro.serve.request import SolveRequest
+from repro.sparse.gallery import BANDED_OFFSETS, spd_banded
 
 __all__ = ["TrafficConfig", "pattern_gallery", "generate_traffic"]
 
@@ -34,63 +35,26 @@ class TrafficConfig:
     seed: int = 0
 
 
-def _stencil(n: int, offsets: Tuple[int, ...], shift: float,
-             rng: np.random.Generator) -> Tuple[np.ndarray, np.ndarray,
-                                                np.ndarray]:
-    """Diagonally dominant SPD banded matrix as host CSR arrays.
-
-    Distinct ``offsets`` tuples give distinct sparsity patterns; ``shift``
-    and the random diagonal jitter vary the values within a pattern.
-    """
-    a = np.zeros((n, n), np.float32)
-    idx = np.arange(n)
-    a[idx, idx] = shift + rng.uniform(0.0, 0.5, size=n).astype(np.float32)
-    for off in offsets:
-        w = np.float32(-1.0 / off)
-        a[idx[off:], idx[:-off]] = w
-        a[idx[:-off], idx[off:]] = w
-    # diagonal dominance keeps every draw SPD
-    a[idx, idx] += np.abs(a).sum(axis=1).astype(np.float32)
-    nz = a != 0
-    indptr = np.zeros(n + 1, np.int64)
-    indptr[1:] = np.cumsum(nz.sum(axis=1))
-    indices = np.nonzero(nz)[1].astype(np.int32)
-    values = a[nz].astype(np.float32)
-    return indptr, indices, values
-
-
-#: off-diagonal offset sets — each a distinct sparsity pattern
-_OFFSETS = (
-    (1,),
-    (1, 2),
-    (1, 3),
-    (1, 2, 4),
-    (2,),
-    (1, 2, 3),
-    (1, 5),
-    (3,),
-)
-
-
 def pattern_gallery(cfg: TrafficConfig):
     """``gallery_size`` distinct (indptr, indices) patterns with a values
-    generator per pattern."""
-    if cfg.gallery_size > len(_OFFSETS):
+    generator per pattern (drawn from :func:`repro.sparse.gallery.spd_banded`).
+    """
+    if cfg.gallery_size > len(BANDED_OFFSETS):
         raise ValueError(
-            f"gallery_size {cfg.gallery_size} exceeds the {len(_OFFSETS)} "
-            "available distinct stencils"
+            f"gallery_size {cfg.gallery_size} exceeds the "
+            f"{len(BANDED_OFFSETS)} available distinct stencils"
         )
     rng = np.random.default_rng(cfg.seed)
     gallery = []
     for g in range(cfg.gallery_size):
-        offsets = _OFFSETS[g]
+        offsets = BANDED_OFFSETS[g]
         shift = 3.0 + g
 
         def make_values(offsets=offsets, shift=shift):
-            return _stencil(cfg.n, offsets, shift, rng)
+            return spd_banded(cfg.n, offsets, shift, rng)[:3]
 
-        indptr, indices, _ = _stencil(cfg.n, offsets, shift,
-                                      np.random.default_rng(0))
+        indptr, indices, _, _ = spd_banded(cfg.n, offsets, shift,
+                                           np.random.default_rng(0))
         gallery.append((indptr, indices, make_values))
     return gallery
 

@@ -51,7 +51,8 @@ __all__ = [
 ]
 
 #: a preconditioner argument: a LinOp / callable ``v -> M^{-1} v`` or a kind
-#: name (``"jacobi"`` / ``"block_jacobi"`` / ``"parilu"`` / ``"identity"``)
+#: name (``"jacobi"`` / ``"block_jacobi"`` / ``"parilu"`` / ``"amg"`` /
+#: ``"identity"``)
 #: that :func:`repro.precond.make_preconditioner` resolves against ``A`` — the
 #: string path is how the ``adaptive`` storage knob threads through the
 #: solvers: ``cg(A, b, M="block_jacobi", precond_opts={"adaptive": True})``.

@@ -324,14 +324,19 @@ def ell_from_csr_host(indptr, indices, values, shape, max_nnz=None) -> Ell:
     row_nnz = np.diff(indptr)
     k = int(max_nnz if max_nnz is not None else (row_nnz.max() if m else 0))
     k = max(k, 1)
+    bad = np.flatnonzero(row_nnz > k)
+    if bad.size:
+        raise ValueError(
+            f"row {int(bad[0])} has {int(row_nnz[bad[0]])} nnz > max_nnz {k}"
+        )
     cols = np.zeros((m, k), np.int32)
     vals = np.zeros((m, k), values.dtype)
-    for i in range(m):
-        n = row_nnz[i]
-        if n > k:
-            raise ValueError(f"row {i} has {n} nnz > max_nnz {k}")
-        cols[i, :n] = indices[indptr[i] : indptr[i] + n]
-        vals[i, :n] = values[indptr[i] : indptr[i] + n]
+    # vectorized scatter: entry t of the CSR stream lands at
+    # (row[t], t - indptr[row[t]])
+    rows = np.repeat(np.arange(m, dtype=np.int64), row_nnz)
+    pos = np.arange(indices.shape[0], dtype=np.int64) - indptr[:-1][rows]
+    cols[rows, pos] = indices
+    vals[rows, pos] = values
     return Ell(jnp.asarray(cols), jnp.asarray(vals), tuple(shape))
 
 

@@ -1,0 +1,163 @@
+"""repro.sparse.gallery — parameterized SPD stencil generators (host CSR).
+
+The realistic-matrix corpus the solver stack is exercised on: 2D/3D Poisson
+finite-difference stencils, anisotropic diffusion, and the diagonally
+dominant banded family the serve traffic generator draws from.  Every
+generator returns host CSR arrays ``(indptr, indices, values, shape)`` —
+``repro.sparse.csr_from_arrays`` turns them into a device :class:`Csr`; the
+serve layer consumes the host arrays directly (its requests travel as numpy).
+
+These are the PDE-like spectra where Krylov iteration counts grow with √κ —
+the matrices the AMG preconditioner (:mod:`repro.precond.amg`) exists for —
+generated vectorized so the 10⁵–10⁶-row sizes the benchmarks use build in
+milliseconds, not minutes.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+__all__ = [
+    "BANDED_OFFSETS",
+    "HostCsr",
+    "anisotropic_2d",
+    "poisson_2d",
+    "poisson_3d",
+    "spd_banded",
+]
+
+#: (indptr, indices, values, shape) — the host-side CSR quadruple
+HostCsr = Tuple[np.ndarray, np.ndarray, np.ndarray, Tuple[int, int]]
+
+#: off-diagonal offset sets for :func:`spd_banded` — each a distinct sparsity
+#: pattern (the serve traffic gallery indexes into this tuple)
+BANDED_OFFSETS = (
+    (1,),
+    (1, 2),
+    (1, 3),
+    (1, 2, 4),
+    (2,),
+    (1, 2, 3),
+    (1, 5),
+    (3,),
+)
+
+
+def _coo_to_csr(
+    rows: np.ndarray, cols: np.ndarray, vals: np.ndarray, n: int
+) -> HostCsr:
+    """Sorted-duplicate-free COO triplets -> host CSR arrays."""
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    indptr = np.zeros(n + 1, np.int64)
+    indptr[1:] = np.cumsum(np.bincount(rows, minlength=n))
+    return indptr, cols.astype(np.int32), vals.astype(np.float32), (n, n)
+
+
+def poisson_2d(n_side: int) -> HostCsr:
+    """5-point 2D Poisson stencil on an ``n_side`` × ``n_side`` grid.
+
+    The canonical SPD model problem: diag 4, four ``-1`` neighbors,
+    Dirichlet boundary.  κ grows like ``n_side²`` — unpreconditioned CG needs
+    O(``n_side``) iterations, AMG O(1).
+    """
+    n = n_side * n_side
+    idx = np.arange(n)
+    gi, gj = idx // n_side, idx % n_side
+    rows = [idx]
+    cols = [idx]
+    vals = [np.full(n, 4.0, np.float32)]
+    for di, dj in ((-1, 0), (1, 0), (0, -1), (0, 1)):
+        ni, nj = gi + di, gj + dj
+        m = (ni >= 0) & (ni < n_side) & (nj >= 0) & (nj < n_side)
+        rows.append(idx[m])
+        cols.append((ni * n_side + nj)[m])
+        vals.append(np.full(int(m.sum()), -1.0, np.float32))
+    return _coo_to_csr(
+        np.concatenate(rows), np.concatenate(cols), np.concatenate(vals), n
+    )
+
+
+def poisson_3d(n_side: int) -> HostCsr:
+    """7-point 3D Poisson stencil on an ``n_side``³ grid (diag 6)."""
+    n = n_side ** 3
+    idx = np.arange(n)
+    gi = idx // (n_side * n_side)
+    gj = (idx // n_side) % n_side
+    gk = idx % n_side
+    rows = [idx]
+    cols = [idx]
+    vals = [np.full(n, 6.0, np.float32)]
+    for di, dj, dk in (
+        (-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1), (0, 0, 1)
+    ):
+        ni, nj, nk = gi + di, gj + dj, gk + dk
+        m = (
+            (ni >= 0) & (ni < n_side)
+            & (nj >= 0) & (nj < n_side)
+            & (nk >= 0) & (nk < n_side)
+        )
+        rows.append(idx[m])
+        cols.append(((ni * n_side + nj) * n_side + nk)[m])
+        vals.append(np.full(int(m.sum()), -1.0, np.float32))
+    return _coo_to_csr(
+        np.concatenate(rows), np.concatenate(cols), np.concatenate(vals), n
+    )
+
+
+def anisotropic_2d(n_side: int, epsilon: float = 0.01) -> HostCsr:
+    """Anisotropic diffusion ``-u_xx - ε u_yy`` on a 2D grid.
+
+    ``epsilon`` ≪ 1 makes the y-coupling weak — the strength-of-connection
+    filter in AMG aggregation must drop the weak direction, which is exactly
+    what :func:`repro.precond.amg.strength_mask`'s θ-threshold tests probe.
+    """
+    n = n_side * n_side
+    eps = np.float32(epsilon)
+    idx = np.arange(n)
+    gi, gj = idx // n_side, idx % n_side
+    rows = [idx]
+    cols = [idx]
+    vals = [np.full(n, 2.0 * (1.0 + eps), np.float32)]
+    # x-direction (strong): weight -1; y-direction (weak): weight -epsilon
+    for (di, dj), w in (
+        ((0, -1), -1.0), ((0, 1), -1.0), ((-1, 0), -eps), ((1, 0), -eps)
+    ):
+        ni, nj = gi + di, gj + dj
+        m = (ni >= 0) & (ni < n_side) & (nj >= 0) & (nj < n_side)
+        rows.append(idx[m])
+        cols.append((ni * n_side + nj)[m])
+        vals.append(np.full(int(m.sum()), w, np.float32))
+    return _coo_to_csr(
+        np.concatenate(rows), np.concatenate(cols), np.concatenate(vals), n
+    )
+
+
+def spd_banded(
+    n: int,
+    offsets: Tuple[int, ...],
+    shift: float,
+    rng: np.random.Generator,
+) -> HostCsr:
+    """Diagonally dominant SPD banded matrix (the serve-traffic family).
+
+    Distinct ``offsets`` tuples give distinct sparsity patterns; ``shift``
+    and the random diagonal jitter vary the values within a pattern.
+    """
+    a = np.zeros((n, n), np.float32)
+    idx = np.arange(n)
+    a[idx, idx] = shift + rng.uniform(0.0, 0.5, size=n).astype(np.float32)
+    for off in offsets:
+        w = np.float32(-1.0 / off)
+        a[idx[off:], idx[:-off]] = w
+        a[idx[:-off], idx[off:]] = w
+    # diagonal dominance keeps every draw SPD
+    a[idx, idx] += np.abs(a).sum(axis=1).astype(np.float32)
+    nz = a != 0
+    indptr = np.zeros(n + 1, np.int64)
+    indptr[1:] = np.cumsum(nz.sum(axis=1))
+    indices = np.nonzero(nz)[1].astype(np.int32)
+    values = a[nz].astype(np.float32)
+    return indptr, indices, values, (n, n)

@@ -15,11 +15,12 @@ from __future__ import annotations
 import contextlib
 import contextvars
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import registry
-from repro.sparse.formats import Coo, Csr, Dense, Ell, Sellp
+from repro.sparse.formats import Coo, Csr, Dense, Ell, Sellp, csr_from_arrays
 
 __all__ = [
     "apply",
@@ -33,6 +34,8 @@ __all__ = [
     "axpy_norm",
     "dot_batch",
     "has_fused_ops",
+    "spgemm",
+    "sptranspose",
 ]
 
 # =============================================================================
@@ -496,6 +499,222 @@ def norm2(x, *, executor=None):
     # bit-for-bit the shape Stop.threshold expects from a global norm
     local = dot_op(xm, xm, executor=executor)
     return jnp.sqrt(jax.lax.psum(local, axis_name).real)
+
+
+# =============================================================================
+# Sparse-sparse composition: SpGEMM and sparse transpose
+# =============================================================================
+#
+# ``gko::Csr::apply(Csr)`` — the setup-path workhorse behind algebraic
+# multigrid's Galerkin triple product R·A·P.  Unlike the SpMV hot path, the
+# *structure* of the result is data-dependent (row nnz of C = A·B is unknown
+# until computed), so every space runs a host-side structure pass:
+#
+#   1. row-nnz upper-bound pass — expand each a_ik into the length of B's row
+#      k (the classical "symbolic" upper bound, before duplicate merging);
+#   2. numeric expansion — produce the (row, col, a_ik·b_kj) triplets (this is
+#      the flop-carrying pass; the pallas space runs it as a tiled kernel in
+#      ``repro.kernels.spgemm``);
+#   3. coalesce — sort triplets by (row, col), merge duplicates, build indptr.
+#
+# All three spaces share steps 1 and 3 bit-for-bit, so the output *structure*
+# is identical across executors (the conformance contract); only step 2's
+# arithmetic differs in summation order, covered by the usual float tolerance.
+# Structural nonzeros are kept even when numerically zero — Ginkgo semantics,
+# and what keeps the pattern a pure function of the operand patterns (the
+# property the serve-cache pattern tier relies on).
+
+spgemm_op = registry.operation(
+    "spgemm", "C = A @ B for CSR pairs (sparse-sparse composition)"
+)
+sptranspose_op = registry.operation(
+    "sptranspose", "B = A^T for CSR (sorted column-major permutation)"
+)
+
+
+def _empty_csr(m: int, n: int, dtype) -> Csr:
+    return csr_from_arrays(
+        np.zeros(m + 1, np.int64), np.zeros(0, np.int32),
+        np.zeros(0, dtype), (m, n),
+    )
+
+
+def _spgemm_maps(A: Csr, B: Csr):
+    """Host structure pass: expansion maps for C = A·B.
+
+    Returns ``(rows_a, b_start, b_len, K)`` where entry t of A contributes
+    products against ``b_len[t]`` entries of B starting at ``b_start[t]``,
+    lands in output row ``rows_a[t]``, and ``K`` is the padded expansion
+    width (max B-row nnz reached by A's column indices).
+    """
+    ai = np.asarray(A.indptr)
+    ac = np.asarray(A.indices)
+    bi = np.asarray(B.indptr)
+    rows_a = np.repeat(np.arange(A.shape[0], dtype=np.int64), np.diff(ai))
+    b_start = bi[ac]
+    b_len = np.diff(bi)[ac]
+    K = int(b_len.max()) if b_len.size else 0
+    return rows_a, b_start, b_len, K
+
+
+def _coalesce_host(rows, cols, vals, m: int):
+    """Sort (row, col, val) triplets, merge duplicate coordinates, build CSR.
+
+    The shared accumulate pass: every space funnels its expanded triplets
+    through this exact routine, which is what makes the output structure
+    bitwise-identical across executors.
+    """
+    if rows.size == 0:
+        return (
+            np.zeros(m + 1, np.int64),
+            np.zeros(0, np.int32),
+            np.zeros(0, vals.dtype),
+        )
+    order = np.lexsort((cols, rows))
+    r, c, v = rows[order], cols[order], vals[order]
+    head = np.ones(r.size, bool)
+    head[1:] = (r[1:] != r[:-1]) | (c[1:] != c[:-1])
+    starts = np.flatnonzero(head)
+    out_v = np.add.reduceat(v, starts)
+    out_r, out_c = r[starts], c[starts]
+    indptr = np.zeros(m + 1, np.int64)
+    indptr[1:] = np.cumsum(np.bincount(out_r, minlength=m))
+    return indptr, out_c.astype(np.int32), out_v
+
+
+def _finalize_spgemm(rows_a, K, valid, cols, prod, m, n) -> Csr:
+    """Pull the expanded (possibly padded) triplets to host and coalesce."""
+    vmask = np.asarray(valid).ravel()
+    rows_f = np.repeat(rows_a, K)[vmask]
+    cols_f = np.asarray(cols).ravel()[vmask]
+    vals_f = np.asarray(prod).ravel()[vmask]
+    indptr, out_c, out_v = _coalesce_host(rows_f, cols_f, vals_f, m)
+    return csr_from_arrays(indptr, out_c, out_v, (m, n))
+
+
+@spgemm_op.register("reference")
+def _spgemm_ref(ex, A: Csr, B: Csr) -> Csr:
+    """Oracle: sequential per-row merge, mirroring Ginkgo's reference kernel."""
+    m, _ = A.shape
+    n = B.shape[1]
+    ai = np.asarray(A.indptr)
+    ac = np.asarray(A.indices)
+    av = np.asarray(A.values)
+    bi = np.asarray(B.indptr)
+    bc = np.asarray(B.indices)
+    bv = np.asarray(B.values)
+    dtype = np.result_type(av.dtype, bv.dtype)
+    indptr = np.zeros(m + 1, np.int64)
+    out_cols: list = []
+    out_vals: list = []
+    for i in range(m):
+        row_c: list = []
+        row_v: list = []
+        for t in range(int(ai[i]), int(ai[i + 1])):
+            k = int(ac[t])
+            s0, s1 = int(bi[k]), int(bi[k + 1])
+            row_c.append(bc[s0:s1])
+            row_v.append(av[t] * bv[s0:s1])
+        if row_c:
+            cat_c = np.concatenate(row_c)
+            cat_v = np.concatenate(row_v)
+            uniq, inv = np.unique(cat_c, return_inverse=True)
+            acc = np.zeros(uniq.size, dtype)
+            np.add.at(acc, inv, cat_v)
+            out_cols.append(uniq.astype(np.int32))
+            out_vals.append(acc)
+            indptr[i + 1] = indptr[i] + uniq.size
+        else:
+            indptr[i + 1] = indptr[i]
+    cols = np.concatenate(out_cols) if out_cols else np.zeros(0, np.int32)
+    vals = np.concatenate(out_vals) if out_vals else np.zeros(0, dtype)
+    return csr_from_arrays(indptr, cols, vals, (m, n))
+
+
+@spgemm_op.register("xla")
+def _spgemm_xla(ex, A: Csr, B: Csr) -> Csr:
+    """One-shot expansion: gather B's rows padded to width K, multiply on
+    device, coalesce on host.  The device pass is a single fused
+    gather-multiply the compiler vectorizes; K is the max B-row width so the
+    expansion is rectangular (the predication-free padding idiom)."""
+    m, _ = A.shape
+    n = B.shape[1]
+    rows_a, b_start, b_len, K = _spgemm_maps(A, B)
+    if K == 0 or rows_a.size == 0:
+        return _empty_csr(m, n, np.result_type(A.dtype, B.dtype))
+    q = np.arange(K)
+    valid = q[None, :] < b_len[:, None]  # (nnzA, K) host bool
+    idx = jnp.asarray(np.where(valid, b_start[:, None] + q[None, :], 0))
+    prod = A.values[:, None] * B.values[idx]
+    cols = B.indices[idx]
+    return _finalize_spgemm(rows_a, K, valid, cols, prod, m, n)
+
+
+@sptranspose_op.register("reference")
+def _sptranspose_ref(ex, A: Csr) -> Csr:
+    """Oracle: host lexsort of the swapped triplet (Csr.transpose semantics)."""
+    m, n = A.shape
+    ai = np.asarray(A.indptr)
+    cols = np.asarray(A.indices)
+    rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(ai))
+    order = np.lexsort((rows, cols))
+    indptr = np.zeros(n + 1, np.int64)
+    indptr[1:] = np.cumsum(np.bincount(cols, minlength=n))
+    return csr_from_arrays(
+        indptr, rows[order].astype(np.int32),
+        np.asarray(A.values)[order], (n, m),
+    )
+
+
+@sptranspose_op.register("xla")
+def _sptranspose_xla(ex, A: Csr) -> Csr:
+    """Device transpose: nnz is invariant so every array keeps a static
+    shape — the whole permutation (lexsort + bincount) stays on device and
+    is jit-traceable."""
+    m, n = A.shape
+    rows = _csr_row_ids(A)
+    order = jnp.lexsort((rows, A.indices))
+    counts = jnp.bincount(A.indices, length=n)
+    t_indptr = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+    )
+    return Csr(
+        indptr=t_indptr,
+        indices=rows[order].astype(jnp.int32),
+        values=A.values[order],
+        shape=(n, m),
+    )
+
+
+def spgemm(A: Csr, B: Csr, *, executor=None) -> Csr:
+    """``C = A @ B`` for CSR operands — executor-dispatched SpGEMM.
+
+    Output rows are column-sorted and duplicate-free; structural nonzeros are
+    kept even when numerically zero, so the result pattern is a pure function
+    of the operand patterns.
+    """
+    if not isinstance(A, Csr) or not isinstance(B, Csr):
+        raise TypeError(
+            f"spgemm needs CSR operands, got {type(A).__name__} × "
+            f"{type(B).__name__}"
+        )
+    m, k = A.shape
+    k2, n = B.shape
+    if k != k2:
+        raise ValueError(f"spgemm shape mismatch: {A.shape} @ {B.shape}")
+    if m == 0 or n == 0 or k == 0 or A.nnz == 0 or B.nnz == 0:
+        return _empty_csr(m, n, np.result_type(A.dtype, B.dtype))
+    return spgemm_op(A, B, executor=executor)
+
+
+def sptranspose(A: Csr, *, executor=None) -> Csr:
+    """``B = Aᵀ`` for CSR — executor-dispatched sparse transpose."""
+    if not isinstance(A, Csr):
+        raise TypeError(f"sptranspose needs a CSR operand, got {type(A).__name__}")
+    m, n = A.shape
+    if m == 0 or n == 0 or A.nnz == 0:
+        return _empty_csr(n, m, A.dtype)
+    return sptranspose_op(A, executor=executor)
 
 
 def dot_batch(pairs, *, executor=None):

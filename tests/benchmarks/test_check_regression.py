@@ -1,0 +1,49 @@
+"""Regression-gate compare rules, incl. bound-normalized frac pins."""
+
+from benchmarks.check_regression import FRAC_TOLERANCE, compare, regressions
+
+
+def _snap(pinned, bound=None):
+    snap = {"schema": "repro-bench/1", "pinned": pinned, "records": []}
+    if bound is not None:
+        snap["records"] = [{"kind": "spmv", "bound_gbs": bound}]
+    return snap
+
+
+def test_count_and_bool_pins_exact():
+    prev = _snap({"launches": 2, "converged": True})
+    cur = _snap({"launches": 3, "converged": False})
+    bad = {r["key"] for r in regressions(compare(prev, cur))}
+    assert bad == {"launches", "converged"}
+    ok = compare(prev, _snap({"launches": 2, "converged": True}))
+    assert not regressions(ok)
+
+
+def test_missing_pin_fails():
+    rows = compare(_snap({"iters": 5}), _snap({}))
+    assert regressions(rows)[0]["threshold"] == "must exist"
+
+
+def test_ratio_pin_ten_percent_band():
+    prev = _snap({"iter_ratio": 40.0})
+    assert not regressions(compare(prev, _snap({"iter_ratio": 36.5})))
+    assert regressions(compare(prev, _snap({"iter_ratio": 35.0})))
+
+
+def test_frac_pin_normalized_by_stream_bound():
+    """The same achieved GB/s under a 4x higher measured bound must pass:
+    the gate compares bandwidth, not the machine-relative fraction."""
+    prev = _snap({"frac_spmv_csr_x": 0.0400}, bound=6.0)
+    # achieved = 0.04 * 6 = 0.24 GB/s; same bandwidth at bound 24 -> 0.01
+    cur = _snap({"frac_spmv_csr_x": 0.0100}, bound=24.0)
+    assert not regressions(compare(prev, cur))
+    # a real bandwidth collapse past the wide band still fails
+    floor = 0.01 * (1.0 - FRAC_TOLERANCE)
+    worse = _snap({"frac_spmv_csr_x": floor * 0.9}, bound=24.0)
+    assert regressions(compare(prev, worse))
+
+
+def test_frac_pin_without_bounds_falls_back_to_ratio_rule():
+    prev = _snap({"frac_spmv_csr_x": 0.04})
+    assert regressions(compare(prev, _snap({"frac_spmv_csr_x": 0.03})))
+    assert not regressions(compare(prev, _snap({"frac_spmv_csr_x": 0.039})))

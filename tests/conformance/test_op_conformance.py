@@ -219,6 +219,76 @@ def test_block_jacobi_apply_conformance(exec_kind, n, bs, seed):
     _assert_conforms(got, ref, what=f"block_jacobi_apply on {exec_kind}", atol=1e-4)
 
 
+@pytest.mark.parametrize("exec_kind", EXEC_KINDS)
+@settings(max_examples=4)
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 24),
+    n=st.integers(1, 24),
+    density=st.floats(0.05, 0.7),
+    seed=st.integers(0, 10_000),
+)
+def test_spgemm_conformance(exec_kind, m, k, n, density, seed):
+    """Sparse-sparse composition joins the matrix.  The structure pass is
+    shared host code, so indptr/indices must agree *bitwise* with the
+    reference space; only the numeric pass may differ in summation order."""
+    a = _pattern(m, k, density, seed)
+    b = _pattern(k, n, density, seed + 1)
+    A = sparse.csr_from_dense(a)
+    B = sparse.csr_from_dense(b)
+    ref = sparse.spgemm(A, B, executor=_reference())
+    got = sparse.spgemm(A, B, executor=make_executor(exec_kind))
+    assert got.shape == ref.shape
+    np.testing.assert_array_equal(
+        np.asarray(got.indptr), np.asarray(ref.indptr),
+        err_msg=f"spgemm indptr diverged on {exec_kind}",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.indices), np.asarray(ref.indices),
+        err_msg=f"spgemm indices diverged on {exec_kind}",
+    )
+    _assert_conforms(
+        got.values, ref.values, what=f"spgemm.values on {exec_kind}", atol=1e-3
+    )
+    # and the reference evaluation must match the dense math
+    np.testing.assert_allclose(
+        np.asarray(sparse.to_dense(ref, executor=_reference())),
+        a @ b, atol=1e-3, rtol=1e-3,
+    )
+
+
+@pytest.mark.parametrize("exec_kind", EXEC_KINDS)
+@settings(max_examples=4)
+@given(
+    m=st.integers(1, 32),
+    n=st.integers(1, 32),
+    density=st.floats(0.05, 0.8),
+    seed=st.integers(0, 10_000),
+)
+def test_sptranspose_conformance(exec_kind, m, n, density, seed):
+    a = _pattern(m, n, density, seed)
+    A = sparse.csr_from_dense(a)
+    ref = sparse.sptranspose(A, executor=_reference())
+    got = sparse.sptranspose(A, executor=make_executor(exec_kind))
+    assert got.shape == ref.shape == (n, m)
+    np.testing.assert_array_equal(
+        np.asarray(got.indptr), np.asarray(ref.indptr),
+        err_msg=f"sptranspose indptr diverged on {exec_kind}",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.indices), np.asarray(ref.indices),
+        err_msg=f"sptranspose indices diverged on {exec_kind}",
+    )
+    _assert_conforms(
+        got.values, ref.values, what=f"sptranspose.values on {exec_kind}",
+        atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        np.asarray(sparse.to_dense(ref, executor=_reference())),
+        a.T, atol=1e-6,
+    )
+
+
 #: the linop_apply axis: composed-operator constructions over a square format
 #: operand.  Each entry builds an operator from (A, n) and the dense ``a`` it
 #: was built from, returning (linop, expected_dense).
@@ -377,8 +447,25 @@ def _axis_linop_apply(ex):
     return {"spmv_csr"}  # the composed operator dispatches its leaves
 
 
+def _axis_spgemm(ex):
+    a = _pattern(10, 10, 0.4, 12)
+    b = _pattern(10, 10, 0.4, 13)
+    sparse.spgemm(
+        sparse.csr_from_dense(a), sparse.csr_from_dense(b), executor=ex
+    )
+    return {"spgemm"}
+
+
+def _axis_sptranspose(ex):
+    sparse.sptranspose(sparse.csr_from_dense(_pattern(9, 13, 0.4, 14)),
+                       executor=ex)
+    return {"sptranspose"}
+
+
 _TRACE_AXES = {
     "spmv": _axis_spmv,
+    "spgemm": _axis_spgemm,
+    "sptranspose": _axis_sptranspose,
     "to_dense": _axis_to_dense,
     "blas1": _axis_blas1,
     "spmv_dot": _axis_spmv_dot,

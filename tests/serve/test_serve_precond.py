@@ -1,0 +1,147 @@
+"""Serve preconditioner lanes beyond block-Jacobi: ParILU and AMG.
+
+The PR-8 engine cached only block-Jacobi factors in the values tier; this
+module pins the generalized seam: ``precond="parilu"`` caches the Chow–Patel
+sweep factors ``[L | U]`` and ``precond="amg"`` caches the two-level row
+``[inv_diag | A_c⁻¹]`` — both as flat per-system rows in the same
+pattern-keyed :class:`~repro.serve.cache.SetupCache`, with the same zero-
+generate-dispatch guarantee on cache hits.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import XlaExecutor
+from repro.serve import ContinuousBatchEngine, ServeConfig
+from repro.serve.request import SolveRequest
+from repro.solvers import Stop
+from repro.sparse.gallery import poisson_2d
+
+STOP = Stop(max_iters=300, reduction_factor=1e-6)
+
+
+def _requests(count, seed=0, n_side=8, scale=None):
+    indptr, indices, values, shape = poisson_2d(n_side)
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(count):
+        vals = values.astype(np.float32)
+        if scale is not None:
+            vals = vals * np.float32(scale[i % len(scale)])
+        out.append(SolveRequest(
+            indptr=indptr, indices=indices, values=vals,
+            b=rng.normal(size=shape[0]).astype(np.float32), shape=shape,
+        ))
+    return out
+
+
+def _dense(req) -> np.ndarray:
+    n = req.shape[0]
+    a = np.zeros((n, n), np.float32)
+    for i in range(n):
+        lo, hi = int(req.indptr[i]), int(req.indptr[i + 1])
+        a[i, req.indices[lo:hi]] = req.values[lo:hi]
+    return a
+
+
+@pytest.mark.parametrize("precond,solver", [
+    ("parilu", "bicgstab"),
+    ("parilu", "cg"),
+    ("amg", "cg"),
+])
+def test_lane_converges_to_true_solution(precond, solver):
+    ex = XlaExecutor()
+    engine = ContinuousBatchEngine(
+        ServeConfig(slots=4, chunk_sweeps=4, solver=solver, precond=precond,
+                    stop=STOP),
+        executor=ex,
+    )
+    reqs = _requests(5, seed=1)
+    ids = [engine.submit(r) for r in reqs]
+    responses = engine.drain()
+    assert sorted(r.request_id for r in responses) == sorted(ids)
+    by_id = {r.request_id: r for r in responses}
+    for req, rid in zip(reqs, ids):
+        resp = by_id[rid]
+        assert resp.converged
+        res = np.linalg.norm(req.b - _dense(req) @ resp.x)
+        assert res <= 1e-3 * np.linalg.norm(req.b)
+
+
+@pytest.mark.parametrize("precond,solver", [
+    ("parilu", "bicgstab"),
+    ("amg", "cg"),
+])
+def test_cached_hit_issues_zero_generate_dispatches(precond, solver):
+    """Repeat (pattern, values) traffic must touch neither generate op —
+    the dispatch log is the proof, same contract as the block-Jacobi tier."""
+    ex = XlaExecutor()
+    engine = ContinuousBatchEngine(
+        ServeConfig(slots=2, chunk_sweeps=4, solver=solver, precond=precond,
+                    stop=STOP),
+        executor=ex,
+    )
+    cold, warm = _requests(2, seed=2)
+    engine.submit(cold)
+    (cold_resp,) = engine.drain()
+    assert not cold_resp.pattern_hit and not cold_resp.factors_hit
+
+    ex.dispatch_log.clear()
+    engine.submit(warm)
+    (warm_resp,) = engine.drain()
+    assert warm_resp.pattern_hit and warm_resp.factors_hit
+    assert ex.dispatch_log.get("serve_generate_pattern", 0) == 0
+    assert ex.dispatch_log.get("serve_generate_factors", 0) == 0
+
+
+def test_same_pattern_new_values_regenerates_factors_only():
+    ex = XlaExecutor()
+    engine = ContinuousBatchEngine(
+        ServeConfig(slots=2, chunk_sweeps=4, solver="cg", precond="amg",
+                    stop=STOP),
+        executor=ex,
+    )
+    r1, r2 = _requests(2, seed=3, scale=(1.0, 2.5))
+    engine.submit(r1)
+    engine.drain()
+    ex.dispatch_log.clear()
+    engine.submit(r2)
+    (resp,) = engine.drain()
+    assert resp.converged
+    assert resp.pattern_hit and not resp.factors_hit
+    assert ex.dispatch_log.get("serve_generate_pattern", 0) == 0
+    assert ex.dispatch_log.get("serve_generate_factors", 0) == 1
+
+
+def test_parilu_and_amg_share_cache_namespace():
+    """Distinct precond configs must key distinct pattern entries — the same
+    sparsity pattern under two engines never collides in a shared cache."""
+    from repro.serve import SetupCache
+
+    ex = XlaExecutor()
+    cache = SetupCache()
+    reqs = _requests(2, seed=4)
+    e1 = ContinuousBatchEngine(
+        ServeConfig(slots=2, solver="cg", precond="amg", stop=STOP),
+        executor=ex, cache=cache,
+    )
+    e2 = ContinuousBatchEngine(
+        ServeConfig(slots=2, solver="bicgstab", precond="parilu", stop=STOP),
+        executor=ex, cache=cache,
+    )
+    e1.submit(reqs[0])
+    (ra,) = e1.drain()
+    e2.submit(reqs[1])
+    (rb,) = e2.drain()
+    assert ra.converged and rb.converged
+    assert not rb.pattern_hit  # different config part of the key
+    assert len(cache) == 2
+
+
+def test_unknown_precond_rejected():
+    ex = XlaExecutor()
+    engine = ContinuousBatchEngine(
+        ServeConfig(slots=2, precond="ilu0", stop=STOP), executor=ex
+    )
+    with pytest.raises(ValueError, match="unknown serve preconditioner"):
+        engine.submit(_requests(1)[0])
