@@ -155,14 +155,16 @@ def _ssd_runner(ex):
 
 
 def _spmv_ell_runner(ex):
-    from repro import sparse
     from repro.kernels.spmv_ell.kernel import spmv_ell
+    from repro.sparse.formats import ell_from_csr_host
+    from repro.sparse.gallery import power_law_laplacian
 
     rng = _np_rng()
-    n = 512
-    a = rng.normal(size=(n, n)).astype(np.float32)
-    a[rng.random(a.shape) < 0.95] = 0.0
-    A = sparse.ell_from_dense(a)
+    # irregular-degree gallery graph: realistic ELL padding, unlike a
+    # uniform-density random matrix
+    indptr, indices, values, shape = power_law_laplacian(512, seed=0)
+    A = ell_from_csr_host(indptr, indices, values, shape)
+    n = shape[0]
     x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
     shapes = {
         "m": A.values.shape[0], "k": A.values.shape[1], "n": n, "itemsize": 4
@@ -182,14 +184,14 @@ def _spmv_ell_runner(ex):
 
 
 def _spmv_dot_runner(ex):
-    from repro import sparse
     from repro.kernels.spmv_dot.kernel import spmv_dot_ell
+    from repro.sparse.formats import ell_from_csr_host
+    from repro.sparse.gallery import power_law_laplacian
 
     rng = _np_rng()
-    n = 512
-    a = rng.normal(size=(n, n)).astype(np.float32)
-    a[rng.random(a.shape) < 0.95] = 0.0
-    A = sparse.ell_from_dense(a)
+    indptr, indices, values, shape = power_law_laplacian(512, seed=0)
+    A = ell_from_csr_host(indptr, indices, values, shape)
+    n = shape[0]
     x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
     shapes = {
@@ -230,14 +232,15 @@ def _axpy_norm_runner(ex):
 
 
 def _spmv_sellp_runner(ex):
-    from repro import sparse
     from repro.kernels.spmv_sellp.kernel import spmv_sellp
+    from repro.sparse.formats import sellp_from_csr_host
+    from repro.sparse.gallery import convection_diffusion_2d
 
     rng = _np_rng()
-    n = 512
-    a = rng.normal(size=(n, n)).astype(np.float32)
-    a[rng.random(a.shape) < 0.95] = 0.0
-    A = sparse.sellp_from_dense(a)
+    # nonsymmetric gallery stencil at the same 512-row scale the sweep used
+    indptr, indices, values, shape = convection_diffusion_2d(23, peclet=5.0)
+    A = sellp_from_csr_host(indptr, indices, values, shape)
+    n = shape[0]
     x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
     shapes = {
         "m": n, "n": n, "slice_size": A.slice_size,

@@ -83,6 +83,48 @@ def precond_fixture(small: bool = False):
     return a, bs
 
 
+def nonsym_suite(small: bool = False):
+    """Nonsymmetric/realistic-spectrum gallery systems (PR-10 corpus)."""
+    from repro.sparse.gallery import convection_diffusion_2d, power_law_laplacian
+
+    side = 24 if small else 48
+    n = 512 if small else 2048
+    return {
+        f"convdiff{side}_pe0p5": convection_diffusion_2d(
+            side, peclet=0.5, scheme="centered"),
+        f"convdiff{side}_pe5": convection_diffusion_2d(
+            side, peclet=5.0, scheme="upwind"),
+        f"powerlaw{n}": power_law_laplacian(n, seed=4),
+    }
+
+
+def run_nonsym(small: bool = False) -> None:
+    """Nonsymmetric solver survey: time-to-tolerance for the solvers that are
+    actually safe on nonsymmetric A (gmres, bicgstab, cgs) over the gallery
+    corpus.  CG is deliberately absent: the symmetry guard rejects these
+    operands (that rejection is pinned by the tier-1 suite, not timed here).
+    """
+    stop = solvers.Stop(max_iters=2000, reduction_factor=1e-6)
+    with use_executor(XlaExecutor()):
+        for mat_name, (indptr, indices, values, shape) in nonsym_suite(small).items():
+            A = sparse.csr_from_arrays(indptr, indices, values, shape)
+            rng = np.random.default_rng(0)
+            b = jnp.asarray(rng.normal(size=shape[0]).astype(np.float32))
+            for kind, fn in (
+                ("gmres", solvers.gmres),
+                ("bicgstab", solvers.bicgstab),
+                ("cgs", solvers.cgs),
+            ):
+                res = fn(A, b, stop=stop)
+                solve = jax.jit(lambda b, fn=fn: fn(A, b, stop=stop).x)
+                t = time_fn(solve, b, warmup=1, repeats=3)
+                emit(
+                    f"nonsym_{kind}_{mat_name}",
+                    t * 1e6,
+                    f"iters{int(res.iterations)}_conv{int(bool(res.converged))}",
+                )
+
+
 def run_preconditioners(small: bool = False) -> None:
     """Preconditioner survey (the adaptive block-Jacobi feature table):
     CG iterations, wall time, and preconditioner storage per variant."""

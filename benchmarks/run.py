@@ -106,6 +106,9 @@ def main() -> None:
     print("# krylov solvers (paper Figs. 12-14)")
     bench_solvers.run(bw, small=small)
 
+    print("# nonsymmetric gallery corpus (gmres / bicgstab / cgs)")
+    bench_solvers.run_nonsym(small=small)
+
     print("# preconditioner survey (adaptive-precision block-Jacobi)")
     bench_solvers.run_preconditioners(small=small)
 

@@ -291,11 +291,20 @@ class Transpose(LinOp):
     host-side); composed operators distribute through their operands
     recursively.  Operators without a transpose (matrix-free, solvers) raise
     ``NotImplementedError`` — exactly Ginkgo's ``Transposable`` contract.
+
+    Executor threading matches the forward operator exactly: with no explicit
+    ``executor=``, the wrap inherits the wrapped operator's pinned executor,
+    so ``Transpose(Composition(...)).apply`` dispatches through the same
+    ``Executor.launch_config`` path as ``Composition(...).apply`` — the
+    implicit-layer backward (adjoint solve on ``Transpose(A)``) depends on
+    the two passes landing in the same kernel space.
     """
 
     def __init__(self, op, executor=None):
         self.op = op
-        self.executor = executor
+        self.executor = (
+            executor if executor is not None else getattr(op, "executor", None)
+        )
         self._t = _transpose(op)
 
     @property

@@ -142,9 +142,46 @@ def train(
     return params, losses
 
 
+def train_deq(*, steps: int, batch: int, lr: float = 3e-2,
+              log_every: int = 5) -> bool:
+    """Train the deep-equilibrium regression model end to end.
+
+    Every forward is a batched GMRES solve; every backward an adjoint solve
+    through the ``Transpose`` combinator.  Returns True when the loss
+    strictly decreased from first to last logged value (the DEQ-GATE
+    criterion).
+    """
+    from repro.models import deq as deq_lib
+
+    cfg = deq_lib.DeqConfig()
+    params = deq_lib.init_deq(jax.random.PRNGKey(0), cfg)
+    opt = adamw(lambda _: jnp.asarray(lr, jnp.float32),
+                weight_decay=0.0, clip_norm=None)
+    opt_state = opt.init(params)
+    batch_data = deq_lib.synthetic_batch(0, batch, cfg)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch_data):
+        loss, grads = jax.value_and_grad(deq_lib.deq_loss)(params, batch_data, cfg)
+        params, opt_state, _ = opt.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    losses = []
+    for step in range(steps):
+        params, opt_state, loss = step_fn(params, opt_state, batch_data)
+        losses.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"[deq] step {step:4d} loss {losses[-1]:.6f}")
+    decreased = losses[-1] < losses[0]
+    print(f"DEQ-GATE: {'PASS' if decreased else 'FAIL'} "
+          f"(loss {losses[0]:.6f} -> {losses[-1]:.6f})")
+    return decreased
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--model", default="lm", choices=["lm", "deq"])
     ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--global-batch", type=int, default=8)
@@ -156,6 +193,13 @@ def main() -> None:
     args = ap.parse_args()
     trace.enable_from_args(args)
 
+    if args.model == "deq":
+        steps = min(args.steps, 30) if args.smoke else args.steps
+        ok = train_deq(steps=steps, batch=args.global_batch)
+        raise SystemExit(0 if ok else 1)
+
+    if args.arch is None:
+        ap.error("--arch is required for --model lm")
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     handler = PreemptionHandler().install()
     train(

@@ -1,5 +1,5 @@
 """repro.models — the assigned architectures, one contract (see lm.py)."""
 
-from repro.models import lm
+from repro.models import deq, lm
 
 __all__ = ["lm"]

@@ -1,5 +1,5 @@
 """repro.nn — layer library built on executor-dispatched operations."""
 
-from repro.nn import attention, common, layers, mamba, moe, rwkv
+from repro.nn import attention, common, implicit, layers, mamba, moe, rwkv
 
-__all__ = ["attention", "common", "layers", "mamba", "moe", "rwkv"]
+__all__ = ["attention", "common", "implicit", "layers", "mamba", "moe", "rwkv"]

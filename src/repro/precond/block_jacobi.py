@@ -346,6 +346,14 @@ class BlockJacobi(LinOp):
         y = jnp.concatenate(outs, axis=0).reshape(-1)
         return y[self.scatter_idx]
 
+    def transpose(self) -> "BlockJacobi":
+        """``M^{-T}``: the same block structure with each inverted block
+        transposed — ``(blockdiag(B_i)^{-1})^T = blockdiag(B_i^{-T})``."""
+        return dataclasses.replace(
+            self,
+            inv_blocks=tuple(jnp.swapaxes(t, -1, -2) for t in self.inv_blocks),
+        )
+
 
 def block_jacobi(
     A,

@@ -17,9 +17,9 @@ from typing import List, Tuple
 import numpy as np
 
 from repro.serve.request import SolveRequest
-from repro.sparse.gallery import BANDED_OFFSETS, spd_banded
+from repro.sparse.gallery import BANDED_OFFSETS, convection_diffusion_2d, spd_banded
 
-__all__ = ["TrafficConfig", "pattern_gallery", "generate_traffic"]
+__all__ = ["TrafficConfig", "pattern_gallery", "nonsym_gallery", "generate_traffic"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +33,11 @@ class TrafficConfig:
     repeat_ratio: float = 0.6
     n: int = 24
     seed: int = 0
+    #: probability a non-repeat request draws a nonsymmetric convection-
+    #: diffusion pattern instead of an SPD stencil; requires ``n`` to be a
+    #: perfect square and an engine solver that tolerates nonsymmetric A
+    #: (``ServeConfig(solver="bicgstab")``)
+    nonsym_ratio: float = 0.0
 
 
 def pattern_gallery(cfg: TrafficConfig):
@@ -59,6 +64,29 @@ def pattern_gallery(cfg: TrafficConfig):
     return gallery
 
 
+def nonsym_gallery(cfg: TrafficConfig):
+    """Nonsymmetric convection-diffusion patterns (one per Péclet regime).
+
+    Fresh values multiply the stencil by a small random field, so repeats of
+    a pattern still exercise the values-tier cache miss path.
+    """
+    side = int(round(cfg.n ** 0.5))
+    if side * side != cfg.n:
+        raise ValueError(
+            f"nonsym traffic needs a square grid: n={cfg.n} is not a square"
+        )
+    rng = np.random.default_rng(cfg.seed + 17)
+    gallery = []
+    for peclet in (0.5, 5.0):
+        indptr, indices, base, _ = convection_diffusion_2d(side, peclet=peclet)
+
+        def make_values(base=base):
+            return base * (1.0 + 0.05 * rng.random(len(base))).astype(np.float32)
+
+        gallery.append((indptr, indices, make_values))
+    return gallery
+
+
 def generate_traffic(
     cfg: TrafficConfig,
 ) -> List[Tuple[float, SolveRequest]]:
@@ -69,6 +97,7 @@ def generate_traffic(
     """
     rng = np.random.default_rng(cfg.seed + 1)
     gallery = pattern_gallery(cfg)
+    ns_gallery = nonsym_gallery(cfg) if cfg.nonsym_ratio > 0.0 else []
     seen: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
     out: List[Tuple[float, SolveRequest]] = []
     for _ in range(cfg.num_requests):
@@ -76,9 +105,14 @@ def generate_traffic(
         if seen and rng.random() < cfg.repeat_ratio:
             indptr, indices, values = seen[rng.integers(len(seen))]
         else:
-            g = int(rng.integers(len(gallery)))
-            indptr, indices, _ = gallery[g][0], gallery[g][1], None
-            _, _, values = gallery[g][2]()
+            if ns_gallery and rng.random() < cfg.nonsym_ratio:
+                g = int(rng.integers(len(ns_gallery)))
+                indptr, indices = ns_gallery[g][0], ns_gallery[g][1]
+                values = ns_gallery[g][2]()
+            else:
+                g = int(rng.integers(len(gallery)))
+                indptr, indices = gallery[g][0], gallery[g][1]
+                _, _, values = gallery[g][2]()
             seen.append((indptr, indices, values))
         b = rng.normal(size=cfg.n).astype(np.float32)
         out.append((gap, SolveRequest(

@@ -33,6 +33,8 @@ __all__ = [
     "SolveResult",
     "Stop",
     "ScalarJacobi",
+    "probe_symmetry",
+    "ensure_symmetric",
     "jacobi_preconditioner",
     "block_jacobi_preconditioner",
     "identity_preconditioner",
@@ -182,6 +184,74 @@ class ScalarJacobi(LinOp):
 
     def _apply(self, v: jax.Array, executor) -> jax.Array:
         return self.inv_diag.astype(v.dtype) * v
+
+    def transpose(self) -> "ScalarJacobi":
+        # Diagonal operators are symmetric: M^{-T} = M^{-1}.
+        return self
+
+
+def probe_symmetry(A, *, seed: int = 0, rtol: float = 1e-4) -> Optional[bool]:
+    """Cheap seeded two-vector symmetry probe: is ``u^T A v == v^T A u``?
+
+    Returns ``True``/``False`` for concrete square real-dtype format operands,
+    ``None`` when the question cannot be answered cheaply (traced values under
+    ``jit``/``vmap``, matrix-free operators, non-square or complex operands).
+    The probe runs entirely in host numpy so it leaves no trace in any
+    executor's dispatch log — launch-count pins never see it.
+
+    A single random pair catches every nonsymmetric matrix outside a measure-
+    zero set; the tolerance is relative to ``|u|^T |A| |v|`` so cancellation-
+    heavy but symmetric operands do not false-positive.
+    """
+    values = getattr(A, "values", None)
+    shape = getattr(A, "shape", None)
+    if values is None or shape is None or shape[0] != shape[1]:
+        return None
+    if isinstance(values, jax.core.Tracer):
+        return None
+    if jnp.issubdtype(jnp.asarray(values).dtype, jnp.complexfloating):
+        return None
+    try:
+        from repro.sparse.formats import csr_host_arrays
+
+        indptr, indices, vals = csr_host_arrays(A)
+    except Exception:
+        return None
+    import numpy as np
+
+    n = shape[0]
+    rng = np.random.default_rng(seed)
+    u = rng.standard_normal(n)
+    v = rng.standard_normal(n)
+    vals = np.asarray(vals, dtype=np.float64)
+    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    cols = np.asarray(indices, dtype=np.int64)
+    uAv = float(np.sum(u[rows] * vals * v[cols]))
+    vAu = float(np.sum(v[rows] * vals * u[cols]))
+    scale = float(np.sum(np.abs(u[rows]) * np.abs(vals) * np.abs(v[cols])))
+    return abs(uAv - vAu) <= rtol * max(scale, 1.0)
+
+
+def ensure_symmetric(A, *, solver: str, strict: bool = True, seed: int = 0) -> None:
+    """Raise a clear error when an SPD-only solver receives a nonsymmetric A.
+
+    ``cg``/``fcg`` silently diverge or converge to garbage on nonsymmetric
+    operators; this guard turns that silent failure into a loud one at
+    factory/generation time.  ``strict=False`` is the escape hatch for users
+    who know their operator is symmetric in exact arithmetic (or accept the
+    risk).  Probes that cannot decide (traced values, matrix-free A) pass.
+    """
+    if not strict:
+        return
+    sym = probe_symmetry(A, seed=seed)
+    if sym is False:
+        raise ValueError(
+            f"{solver} requires a symmetric (SPD) operator, but a seeded "
+            "symmetry probe found u^T A v != v^T A u. CG-family iterations "
+            "silently produce garbage on nonsymmetric systems - use gmres, "
+            "bicgstab, or cgs instead, or pass strict=False if the operator "
+            "is symmetric in exact arithmetic."
+        )
 
 
 def jacobi_preconditioner(

@@ -32,6 +32,7 @@ from repro.solvers.common import (
     MatrixLike,
     SolveResult,
     Stop,
+    ensure_symmetric,
     identity_preconditioner,
 )
 from repro.sparse import ops as blas
@@ -116,8 +117,13 @@ def cg(
     fused: Optional[bool] = None,
     pipeline: bool = False,
     history=None,
+    strict: bool = True,
 ) -> SolveResult:
     """Preconditioned conjugate gradient (SPD systems).
+
+    ``strict=True`` (the default) runs a cheap seeded symmetry probe on
+    concrete format operands and raises instead of silently producing
+    garbage on nonsymmetric A; ``strict=False`` is the escape hatch.
 
     ``history=True`` (or an int capacity) records per-iteration residual
     norms into a jit-safe ring buffer surfaced as ``SolveResult.history``
@@ -140,9 +146,13 @@ def cg(
     may differ by a step or two from classic CG.
     """
     if getattr(A, "is_distributed", False):
+        # shard-local re-entry must not probe: local row blocks of a
+        # symmetric global matrix are not themselves symmetric
         return _dist_route(cg, A, b, x0, stop=stop, M=M,
                            precond_opts=precond_opts, executor=executor,
-                           fused=fused, pipeline=pipeline, history=history)
+                           fused=fused, pipeline=pipeline, history=history,
+                           strict=False)
+    ensure_symmetric(A, solver="cg", strict=strict)
     if pipeline:
         return _pipelined_cg(A, b, x0, stop=stop, M=M,
                              precond_opts=precond_opts, executor=executor,
@@ -326,13 +336,18 @@ def fcg(
     precond_opts: Optional[dict] = None,
     executor=None,
     history=None,
+    strict: bool = True,
 ) -> SolveResult:
     """Flexible CG (Ginkgo's FCG): Polak–Ribière beta = r'(r - r_prev)/rz_prev,
-    robust to non-constant preconditioners."""
+    robust to non-constant preconditioners.
+
+    Like :func:`cg`, ``strict=True`` probes concrete operands for symmetry
+    and raises on nonsymmetric A instead of silently diverging."""
     if getattr(A, "is_distributed", False):
         return _dist_route(fcg, A, b, x0, stop=stop, M=M,
                            precond_opts=precond_opts, executor=executor,
-                           history=history)
+                           history=history, strict=False)
+    ensure_symmetric(A, solver="fcg", strict=strict)
     op, x, M = _setup(A, b, x0, M, executor, precond_opts)
     ex = executor
     bnorm = blas.norm2(b, executor=ex)
@@ -691,6 +706,7 @@ class KrylovSolver(LinOp):
     """
 
     _fn: Callable = None  # bound per subclass
+    _requires_spd: bool = False  # CG-family subclasses probe at generation
 
     def __init__(
         self,
@@ -704,6 +720,13 @@ class KrylovSolver(LinOp):
     ):
         self.A = as_linop(A)
         self.stop = stop
+        if self._requires_spd:
+            # generation-time symmetry probe (Ginkgo generates eagerly, so
+            # failing here is the earliest loud failure point); the solve-time
+            # check is skipped since generation already vetted the operand
+            ensure_symmetric(A, solver=type(self).__name__,
+                             strict=options.get("strict", True))
+            options["strict"] = False
         if getattr(self.A, "is_distributed", False):
             # generation-time resolution for distributed operands goes through
             # the shard-local generators (a global M cannot apply per shard)
@@ -739,6 +762,7 @@ class CgSolver(KrylovSolver):
     """Generated CG solver (SPD) as a LinOp."""
 
     _fn = staticmethod(cg)
+    _requires_spd = True
 
 
 class PipelinedCgSolver(KrylovSolver):
@@ -751,6 +775,7 @@ class PipelinedCgSolver(KrylovSolver):
     solver of choice at scale."""
 
     _fn = staticmethod(cg)
+    _requires_spd = True
 
     def __init__(self, A, **kw):
         super().__init__(A, pipeline=True, **kw)
@@ -760,6 +785,7 @@ class FcgSolver(KrylovSolver):
     """Generated flexible-CG solver as a LinOp."""
 
     _fn = staticmethod(fcg)
+    _requires_spd = True
 
 
 class BicgstabSolver(KrylovSolver):

@@ -75,10 +75,27 @@ class MatrixLinOp(LinOp):
         return dataclasses.replace(self, values=self.values.astype(dtype))
 
     def transpose(self):
-        raise NotImplementedError(
-            f"{type(self).__name__} is not transposable (Ginkgo's "
-            "Transposable covers Dense/Coo/Csr; convert first)"
+        """Transpose via the host CSR hub (setup time, concrete values only).
+
+        Dense/Coo/Csr override with direct (and tracer-safe) paths; the
+        padded formats route through :func:`csr_host_arrays` and rebuild in
+        their own format, so ``Transpose(A)`` works for every format.
+        """
+        indptr, indices, values = csr_host_arrays(self)
+        m, n = self.shape
+        t_indptr, t_indices, t_values = _transpose_host(
+            indptr, indices, values, m, n
         )
+        tT = convert(
+            Csr(
+                indptr=jnp.asarray(t_indptr, jnp.int32),
+                indices=jnp.asarray(t_indices, jnp.int32),
+                values=jnp.asarray(t_values),
+                shape=(n, m),
+            ),
+            type(self),
+        )
+        return tT
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,15 +150,20 @@ class Coo(MatrixLinOp):
         return _nbytes(self.row_idx, self.col_idx, self.values)
 
     def transpose(self) -> "Coo":
-        """Host-side transpose (setup time): swap indices, restore row order."""
+        """Transpose: swap indices, restore row order.
+
+        Structure work is host-side (indices must be concrete); the values
+        are permuted on-device, so a ``Coo`` built inside a trace from a
+        static pattern and *traced* values transposes cleanly (the implicit-
+        layer backward relies on this).
+        """
         r = np.asarray(self.col_idx)
         c = np.asarray(self.row_idx)
-        v = np.asarray(self.values)
         order = np.lexsort((c, r))
         return Coo(
             row_idx=jnp.asarray(r[order], jnp.int32),
             col_idx=jnp.asarray(c[order], jnp.int32),
-            values=jnp.asarray(v[order]),
+            values=jnp.take(self.values, jnp.asarray(order), axis=0),
             shape=(self.shape[1], self.shape[0]),
         )
 
@@ -171,8 +193,16 @@ class Csr(MatrixLinOp):
         return _nbytes(self.indptr, self.indices, self.values)
 
     def transpose(self) -> "Csr":
-        """Host-side transpose (setup time) via the sorted triplet."""
-        indptr, indices, values = csr_host_arrays(self)
+        """Transpose via the sorted triplet.
+
+        Structure work (the permutation) is host-side and needs concrete
+        ``indptr``/``indices``; the values are permuted on-device with a
+        single gather, so a ``Csr`` built inside a trace from a static
+        pattern and *traced* values transposes cleanly — the implicit-layer
+        backward (``Transpose(A)`` under ``jit``) relies on this.
+        """
+        indptr = np.asarray(self.indptr, np.int64)
+        indices = np.asarray(self.indices, np.int64)
         m = self.shape[0]
         rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(indptr))
         tr, tc = indices, rows  # swapped
@@ -182,7 +212,7 @@ class Csr(MatrixLinOp):
         return Csr(
             indptr=jnp.asarray(np.cumsum(t_indptr), jnp.int32),
             indices=jnp.asarray(tc[order], jnp.int32),
-            values=jnp.asarray(values[order]),
+            values=jnp.take(self.values, jnp.asarray(order), axis=0),
             shape=(self.shape[1], self.shape[0]),
         )
 
@@ -263,12 +293,35 @@ class Sellp(MatrixLinOp):
     def memory_bytes(self) -> int:
         return _nbytes(self.col_idx, self.values, self.slice_sets, self.slice_cols)
 
+    def transpose(self) -> "Sellp":
+        """Transpose preserving this matrix's slice layout parameters."""
+        indptr, indices, values = csr_host_arrays(self)
+        m, n = self.shape
+        t_indptr, t_indices, t_values = _transpose_host(
+            indptr, indices, values, m, n
+        )
+        return sellp_from_csr_host(
+            t_indptr, t_indices, t_values, (n, m),
+            slice_size=self.slice_size, stride_factor=self.stride_factor,
+        )
+
 
 _register(
     Sellp,
     ["col_idx", "values", "slice_sets", "slice_cols"],
     ["shape", "slice_size", "stride_factor", "max_slice_cols"],
 )
+
+
+def _transpose_host(
+    indptr: np.ndarray, indices: np.ndarray, values: np.ndarray, m: int, n: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Transpose a host CSR triplet of an ``(m, n)`` matrix (setup time)."""
+    rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(indptr))
+    order = np.lexsort((rows, indices))
+    t_indptr = np.zeros(n + 1, np.int64)
+    np.add.at(t_indptr, indices + 1, 1)
+    return np.cumsum(t_indptr), rows[order], values[order]
 
 
 # -- host-side constructors (setup-time, numpy) --------------------------------

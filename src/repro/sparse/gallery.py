@@ -1,11 +1,15 @@
-"""repro.sparse.gallery — parameterized SPD stencil generators (host CSR).
+"""repro.sparse.gallery — parameterized matrix generators (host CSR).
 
 The realistic-matrix corpus the solver stack is exercised on: 2D/3D Poisson
-finite-difference stencils, anisotropic diffusion, and the diagonally
-dominant banded family the serve traffic generator draws from.  Every
-generator returns host CSR arrays ``(indptr, indices, values, shape)`` —
-``repro.sparse.csr_from_arrays`` turns them into a device :class:`Csr`; the
-serve layer consumes the host arrays directly (its requests travel as numpy).
+finite-difference stencils, anisotropic diffusion, the diagonally dominant
+banded family the serve traffic generator draws from, seeded power-law graph
+Laplacians (irregular row-length distributions, the spectra graph solvers
+see), and nonsymmetric convection-diffusion with upwind/centered
+discretizations and a mesh-Péclet knob (the workloads CG is *unsafe* on —
+GMRES/BiCGSTAB territory).  Every generator returns host CSR arrays
+``(indptr, indices, values, shape)`` — ``repro.sparse.csr_from_arrays`` turns
+them into a device :class:`Csr`; the serve layer consumes the host arrays
+directly (its requests travel as numpy).
 
 These are the PDE-like spectra where Krylov iteration counts grow with √κ —
 the matrices the AMG preconditioner (:mod:`repro.precond.amg`) exists for —
@@ -23,8 +27,10 @@ __all__ = [
     "BANDED_OFFSETS",
     "HostCsr",
     "anisotropic_2d",
+    "convection_diffusion_2d",
     "poisson_2d",
     "poisson_3d",
+    "power_law_laplacian",
     "spd_banded",
 ]
 
@@ -133,6 +139,126 @@ def anisotropic_2d(n_side: int, epsilon: float = 0.01) -> HostCsr:
     return _coo_to_csr(
         np.concatenate(rows), np.concatenate(cols), np.concatenate(vals), n
     )
+
+
+def convection_diffusion_2d(
+    n_side: int,
+    peclet: float = 1.0,
+    *,
+    scheme: str = "upwind",
+    velocity: Tuple[float, float] = (1.0, 0.5),
+) -> HostCsr:
+    """Nonsymmetric convection-diffusion ``-Δu + w·∇u`` on an ``n_side``² grid.
+
+    ``peclet`` is the mesh Péclet number ``Pe = |w| h / (2ε)`` — the knob that
+    moves the spectrum from diffusion-dominated (symmetric-ish, ``Pe ≪ 1``)
+    to convection-dominated (strongly nonsymmetric, ``Pe ≫ 1``).  Rows are
+    scaled by ``h²/ε`` so entries stay O(1) at every size.
+
+    ``scheme="upwind"`` uses first-order upwind convection: an M-matrix,
+    (weakly) diagonally dominant at any Péclet — the robust discretization.
+    ``scheme="centered"`` uses central differences: second-order accurate but
+    loses diagonal dominance past ``Pe = 1`` (the classic oscillatory regime),
+    which is exactly the stress the nonsymmetric solvers need exercised.
+
+    Either way the matrix is NOT symmetric (``velocity`` ≠ 0): ``cg``/``fcg``
+    are wrong on it and must refuse (see the solver symmetry guard); use
+    ``gmres``/``bicgstab``/``cgs``.
+    """
+    if scheme not in ("upwind", "centered"):
+        raise ValueError(
+            f"unknown scheme {scheme!r} (expected 'upwind' or 'centered')"
+        )
+    wx, wy = float(velocity[0]), float(velocity[1])
+    wmag = float(np.hypot(wx, wy))
+    if wmag == 0.0:
+        raise ValueError("velocity must be nonzero for a convective term")
+    # per-direction mesh Péclet: gamma_d = w_d * h / (2 eps)
+    gx = float(peclet) * wx / wmag
+    gy = float(peclet) * wy / wmag
+
+    n = n_side * n_side
+    idx = np.arange(n)
+    gi, gj = idx // n_side, idx % n_side
+    if scheme == "centered":
+        diag = np.full(n, 4.0, np.float64)
+        # (di, dj) -> stencil weight; +dj is +x (east), +di is +y (north)
+        weights = {
+            (0, 1): -1.0 + gx,
+            (0, -1): -1.0 - gx,
+            (1, 0): -1.0 + gy,
+            (-1, 0): -1.0 - gy,
+        }
+    else:  # upwind, first order — donor cell against the flow direction
+        diag = np.full(n, 4.0 + 2.0 * (abs(gx) + abs(gy)), np.float64)
+        weights = {
+            (0, 1): -1.0 - (2.0 * -gx if gx < 0 else 0.0),
+            (0, -1): -1.0 - (2.0 * gx if gx > 0 else 0.0),
+            (1, 0): -1.0 - (2.0 * -gy if gy < 0 else 0.0),
+            (-1, 0): -1.0 - (2.0 * gy if gy > 0 else 0.0),
+        }
+    rows = [idx]
+    cols = [idx]
+    vals = [diag]
+    for (di, dj), w in weights.items():
+        ni, nj = gi + di, gj + dj
+        m = (ni >= 0) & (ni < n_side) & (nj >= 0) & (nj < n_side)
+        rows.append(idx[m])
+        cols.append((ni * n_side + nj)[m])
+        vals.append(np.full(int(m.sum()), w, np.float64))
+    return _coo_to_csr(
+        np.concatenate(rows), np.concatenate(cols), np.concatenate(vals), n
+    )
+
+
+def power_law_laplacian(
+    n: int,
+    *,
+    exponent: float = 2.5,
+    min_degree: int = 2,
+    shift: float = 1e-2,
+    seed: int = 0,
+) -> HostCsr:
+    """Shifted graph Laplacian ``L + shift·I`` of a seeded power-law graph.
+
+    Degrees are drawn from a Pareto tail with index ``exponent - 1`` (so the
+    degree distribution decays like ``d^-exponent``, the scale-free regime)
+    and wired by a configuration model: stub pairing, self-loops and
+    duplicate edges dropped.  Unlike the stencils, row lengths are wildly
+    irregular — a few hub rows with O(√n) entries next to degree-2 leaves —
+    which is the load-imbalance stress ELL padding and SpMV row-splitting
+    heuristics exist for.
+
+    ``L = D - A`` is symmetric positive *semi*-definite (constant vector in
+    the kernel); the ``shift`` makes it SPD so CG/AMG apply cleanly.
+    Deterministic for a given ``seed``.
+    """
+    if n < 2:
+        raise ValueError(f"need at least 2 vertices, got {n}")
+    rng = np.random.default_rng(seed)
+    deg = min_degree + np.floor(rng.pareto(exponent - 1.0, size=n)).astype(
+        np.int64
+    )
+    deg = np.minimum(deg, n - 1)
+    stubs = np.repeat(np.arange(n, dtype=np.int64), deg)
+    if stubs.size % 2:
+        stubs = stubs[:-1]
+    rng.shuffle(stubs)
+    u, v = stubs[0::2], stubs[1::2]
+    keep = u != v  # drop self-loops
+    u, v = u[keep], v[keep]
+    # canonicalize + dedupe parallel edges from the stub pairing
+    lo, hi = np.minimum(u, v), np.maximum(u, v)
+    edges = np.unique(lo * n + hi)
+    lo, hi = edges // n, edges % n
+    rows = np.concatenate([lo, hi, np.arange(n, dtype=np.int64)])
+    cols = np.concatenate([hi, lo, np.arange(n, dtype=np.int64)])
+    final_deg = np.bincount(np.concatenate([lo, hi]), minlength=n)
+    vals = np.concatenate([
+        np.full(lo.size * 2, -1.0, np.float64),
+        final_deg.astype(np.float64) + float(shift),
+    ])
+    return _coo_to_csr(rows, cols, vals, n)
 
 
 def spd_banded(

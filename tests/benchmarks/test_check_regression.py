@@ -1,6 +1,15 @@
-"""Regression-gate compare rules, incl. bound-normalized frac pins."""
+"""Regression-gate compare rules, incl. bound-normalized frac pins and
+gap-tolerant previous-snapshot discovery."""
 
-from benchmarks.check_regression import FRAC_TOLERANCE, compare, regressions
+import json
+
+from benchmarks.check_regression import (
+    FRAC_TOLERANCE,
+    compare,
+    find_previous,
+    main,
+    regressions,
+)
 
 
 def _snap(pinned, bound=None):
@@ -47,3 +56,45 @@ def test_frac_pin_without_bounds_falls_back_to_ratio_rule():
     prev = _snap({"frac_spmv_csr_x": 0.04})
     assert regressions(compare(prev, _snap({"frac_spmv_csr_x": 0.03})))
     assert not regressions(compare(prev, _snap({"frac_spmv_csr_x": 0.039})))
+
+
+def _write_snap(path, pinned):
+    path.write_text(json.dumps(dict(_snap(pinned), schema="repro-bench/1")))
+
+
+def test_find_previous_skips_gaps(tmp_path):
+    """With only pr6 and pr9 committed, pr10 must diff against pr9 — the
+    *latest prior by PR number* — not a nonexistent pr9==N-1 assumption,
+    and never a future snapshot."""
+    for n in (6, 9, 12):
+        _write_snap(tmp_path / f"BENCH_pr{n}.json", {"iters": n})
+    cur = tmp_path / "BENCH_pr10.json"
+    _write_snap(cur, {"iters": 10})
+    prev = find_previous(str(cur))
+    assert prev is not None and prev.endswith("BENCH_pr9.json")
+
+
+def test_find_previous_none_when_first(tmp_path):
+    cur = tmp_path / "BENCH_pr3.json"
+    _write_snap(cur, {"iters": 1})
+    assert find_previous(str(cur)) is None
+
+
+def test_main_gap_case_end_to_end(tmp_path, capsys):
+    """Full gate run over a gap: pr10 vs {pr6, pr9} passes against pr9's
+    pins and fails against a (hypothetical) regression from pr9, proving
+    the comparison really used pr9 and not pr6."""
+    _write_snap(tmp_path / "BENCH_pr6.json", {"launches": 99})
+    _write_snap(tmp_path / "BENCH_pr9.json", {"launches": 2})
+    cur = tmp_path / "BENCH_pr10.json"
+
+    _write_snap(cur, {"launches": 2})
+    assert main(["--current", str(cur)]) == 0
+    out = capsys.readouterr().out
+    assert "REGRESSION-GATE: PASS" in out and "BENCH_pr9.json" in out
+
+    # 3 launches would pass vs pr6's 99 — it must FAIL because pr9 is the base
+    _write_snap(cur, {"launches": 3})
+    assert main(["--current", str(cur)]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION-GATE: FAIL" in out and "BENCH_pr9.json" in out

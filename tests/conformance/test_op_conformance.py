@@ -34,6 +34,7 @@ from _hyp_compat import given, settings, st
 
 from repro import sparse
 from repro.core import Composition, ScaledIdentity, Sum, make_executor, registry
+from repro.sparse import gallery
 import repro.kernels  # noqa: F401 — populate the pallas kernel space
 
 _KINDS = ("reference", "xla", "pallas_interpret")
@@ -542,3 +543,35 @@ def test_dispatch_counts_unchanged_by_tracing(exec_kind):
     finally:
         trace_mod.reset()
     assert on_counts == off_counts
+
+
+# -- gallery-operand axis (PR-10): realistic spectra through every space ------
+
+_GALLERY_CASES = {
+    "convdiff_upwind": lambda: gallery.convection_diffusion_2d(
+        7, peclet=5.0, scheme="upwind"),
+    "convdiff_centered": lambda: gallery.convection_diffusion_2d(
+        7, peclet=0.5, scheme="centered"),
+    "powerlaw": lambda: gallery.power_law_laplacian(50, seed=3),
+}
+
+
+@pytest.mark.parametrize("exec_kind", EXEC_KINDS)
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("case", sorted(_GALLERY_CASES))
+def test_gallery_spmv_conformance(case, fmt, exec_kind):
+    """The nonsymmetric/irregular gallery corpus must conform exactly like
+    the synthetic patterns: same structure, same values, every format x
+    executor — nonsymmetry and power-law degree spreads exercise row-length
+    imbalance the uniform-density samples can't."""
+    indptr, indices, values, shape = _GALLERY_CASES[case]()
+    a = np.zeros(shape, np.float32)
+    rows = np.repeat(np.arange(shape[0]), np.diff(indptr))
+    a[rows, indices] = values
+    x = np.random.default_rng(5).normal(size=(shape[1],)).astype(np.float32)
+    A = BUILD[fmt](a)
+    ref = sparse.apply(A, jnp.asarray(x), executor=_reference())
+    got = sparse.apply(A, jnp.asarray(x), executor=make_executor(exec_kind))
+    _assert_conforms(
+        got, ref, what=f"gallery[{case}] spmv[{fmt}] on {exec_kind}", atol=1e-3
+    )

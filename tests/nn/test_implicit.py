@@ -1,0 +1,123 @@
+"""Implicit (DEQ) layer: forward = solve, backward = adjoint, trains end to end.
+
+The backward pass is verified against central finite differences in f64 dense
+arithmetic — the acceptance criterion for the custom_vjp ↔ Transpose mapping.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import deq as deq_lib
+from repro.nn.implicit import make_implicit_solve
+from repro.solvers.common import Stop
+from repro.sparse.gallery import convection_diffusion_2d
+
+TIGHT = Stop(max_iters=400, reduction_factor=1e-10)
+
+
+def _fixture(n_side=6, peclet=2.0, seed=0):
+    indptr, indices, values, shape = convection_diffusion_2d(n_side, peclet=peclet)
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(
+        values + 0.01 * rng.standard_normal(values.shape).astype(np.float32)
+    )
+    n = shape[0]
+    b = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    rows = np.repeat(np.arange(n), np.diff(indptr))
+    return indptr, indices, shape, rows, vals, b
+
+
+def _dense(rows, indices, n, values):
+    d = np.zeros((n, n), np.float64)
+    d[rows, indices] = values
+    return d
+
+
+def test_forward_is_the_solve():
+    indptr, indices, shape, rows, vals, b = _fixture()
+    solve = make_implicit_solve(indptr, indices, shape, stop=TIGHT)
+    x = np.asarray(solve(vals, b))
+    xd = np.linalg.solve(_dense(rows, indices, shape[0], np.asarray(vals)),
+                         np.asarray(b, np.float64))
+    np.testing.assert_allclose(x, xd, rtol=1e-4, atol=1e-5)
+
+
+def test_gradients_match_finite_differences():
+    indptr, indices, shape, rows, vals, b = _fixture()
+    n = shape[0]
+    solve = make_implicit_solve(indptr, indices, shape, stop=TIGHT)
+    w = jnp.asarray(
+        np.random.default_rng(1).standard_normal(n).astype(np.float32)
+    )
+
+    def loss(vals, b):
+        x = solve(vals, b)
+        return jnp.sum(w * x) + 0.5 * jnp.sum(x * x)
+
+    gv, gb = jax.grad(loss, argnums=(0, 1))(vals, b)
+
+    def loss_np(va, bb):
+        x = np.linalg.solve(_dense(rows, indices, n, va), bb)
+        return float(np.sum(np.asarray(w, np.float64) * x)
+                     + 0.5 * np.sum(x * x))
+
+    v64 = np.asarray(vals, np.float64)
+    b64 = np.asarray(b, np.float64)
+    eps = 1e-6
+    for t in (0, 7, len(v64) // 2, len(v64) - 1):
+        vp, vm = v64.copy(), v64.copy()
+        vp[t] += eps
+        vm[t] -= eps
+        fd = (loss_np(vp, b64) - loss_np(vm, b64)) / (2 * eps)
+        assert abs(fd - float(gv[t])) <= 1e-3 * max(1.0, abs(fd)), (
+            f"d/dvalues[{t}]: fd {fd} vs vjp {float(gv[t])}"
+        )
+    for i in (0, n // 2, n - 1):
+        bp, bm = b64.copy(), b64.copy()
+        bp[i] += eps
+        bm[i] -= eps
+        fd = (loss_np(v64, bp) - loss_np(v64, bm)) / (2 * eps)
+        assert abs(fd - float(gb[i])) <= 1e-3 * max(1.0, abs(fd)), (
+            f"d/db[{i}]: fd {fd} vs vjp {float(gb[i])}"
+        )
+
+
+def test_solve_composes_with_jit_and_vmap():
+    indptr, indices, shape, rows, vals, b = _fixture()
+    solve = make_implicit_solve(indptr, indices, shape, stop=TIGHT)
+    x = solve(vals, b)
+    batched = jax.jit(jax.vmap(lambda bb: solve(vals, bb)))
+    out = batched(jnp.stack([b, 2 * b, -b]))
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(x),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out[1]), 2 * np.asarray(x),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_rectangular_pattern_rejected():
+    indptr = np.array([0, 1, 2])
+    indices = np.array([0, 1])
+    try:
+        make_implicit_solve(indptr, indices, (2, 3))
+    except ValueError as e:
+        assert "square" in str(e)
+    else:
+        raise AssertionError("non-square pattern accepted")
+
+
+def test_deq_smoke_training_reduces_loss():
+    """End-to-end: the DEQ model (GMRES forward, adjoint-Transpose backward)
+    must strictly reduce the teacher-student loss — the DEQ-GATE criterion."""
+    from repro.launch.train import train_deq
+
+    assert train_deq(steps=12, batch=8, log_every=6)
+
+
+def test_deq_forward_batch_shapes():
+    cfg = deq_lib.DeqConfig(n_side=6)
+    params = deq_lib.init_deq(jax.random.PRNGKey(0), cfg)
+    u = jnp.ones((5, cfg.d_in), jnp.float32)
+    y = deq_forward_out = deq_lib.deq_forward(params, u, cfg)
+    assert deq_forward_out.shape == (5,)
+    assert np.all(np.isfinite(np.asarray(y)))

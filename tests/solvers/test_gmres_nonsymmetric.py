@@ -1,0 +1,99 @@
+"""GMRES restart behavior on the nonsymmetric gallery corpus.
+
+Iteration counts are pinned per (Péclet regime, restart length) on the
+convection-diffusion stencils — recorded on jax 0.4.37, f32, CPU, with 15%
+slack for cross-platform float drift (counts are whole restart cycles, so the
+slack usually rounds to the next cycle).  Also pinned qualitatively: in the
+diffusion-dominated regime a too-short restart loses superlinear convergence
+(classic Krylov-subspace truncation), while every regime still converges and
+produces a solution whose *true* residual matches the recurrence's claim.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import sparse, solvers
+from repro.core import XlaExecutor, use_executor
+from repro.sparse.gallery import convection_diffusion_2d
+
+STOP = solvers.Stop(max_iters=1000, reduction_factor=1e-6)
+
+REGIMES = {
+    "diffusive_pe0p1": (0.1, "centered"),
+    "balanced_pe1": (1.0, "upwind"),
+    "advective_pe10": (10.0, "upwind"),
+}
+
+# (regime, restart) -> recorded iterations
+RECORDED = {
+    ("diffusive_pe0p1", 5): 125,
+    ("diffusive_pe0p1", 10): 80,
+    ("diffusive_pe0p1", 40): 80,
+    ("balanced_pe1", 5): 55,
+    ("balanced_pe1", 10): 70,
+    ("balanced_pe1", 40): 80,
+    ("advective_pe10", 5): 60,
+    ("advective_pe10", 10): 90,
+    ("advective_pe10", 40): 40,
+}
+
+
+def _system(regime):
+    peclet, scheme = REGIMES[regime]
+    indptr, indices, values, shape = convection_diffusion_2d(
+        16, peclet=peclet, scheme=scheme
+    )
+    a = np.zeros(shape, np.float32)
+    rows = np.repeat(np.arange(shape[0]), np.diff(indptr))
+    a[rows, indices] = values
+    A = sparse.csr_from_arrays(indptr, indices, values, shape)
+    b = np.random.default_rng(0).normal(size=shape[0]).astype(np.float32)
+    return a, A, b
+
+
+def _bound(recorded: int) -> int:
+    return int(np.ceil(recorded * 1.15))
+
+
+@pytest.mark.parametrize("regime,restart", sorted(RECORDED))
+def test_restart_iteration_pins(regime, restart):
+    a, A, b = _system(regime)
+    with use_executor(XlaExecutor()):
+        res = solvers.gmres(A, jnp.asarray(b), stop=STOP, restart=restart)
+    assert bool(res.converged), f"{regime} restart={restart} did not converge"
+    k = int(res.iterations)
+    assert k <= _bound(RECORDED[(regime, restart)]), (
+        f"{regime} restart={restart}: {k} iterations exceeds recorded "
+        f"bound {_bound(RECORDED[(regime, restart)])}"
+    )
+    rel = np.linalg.norm(b - a @ np.asarray(res.x)) / np.linalg.norm(b)
+    assert rel <= 1e-4, f"true residual {rel:.2e} disagrees with convergence"
+
+
+def test_short_restart_costs_iterations_in_diffusive_regime():
+    """Krylov truncation: restart=5 must burn strictly more iterations than
+    restart=40 on the diffusion-dominated system (near-symmetric spectrum,
+    superlinear CG-like convergence that truncation destroys)."""
+    _, A, b = _system("diffusive_pe0p1")
+    with use_executor(XlaExecutor()):
+        short = solvers.gmres(A, jnp.asarray(b), stop=STOP, restart=5)
+        long = solvers.gmres(A, jnp.asarray(b), stop=STOP, restart=40)
+    assert bool(short.converged) and bool(long.converged)
+    assert int(short.iterations) > int(long.iterations), (
+        f"restart=5 took {int(short.iterations)} <= restart=40's "
+        f"{int(long.iterations)} — truncation penalty disappeared?"
+    )
+
+
+def test_gmres_solver_factory_forwards_restart():
+    _, A, b = _system("advective_pe10")
+    with use_executor(XlaExecutor()):
+        via_fn = solvers.gmres(A, jnp.asarray(b), stop=STOP, restart=10)
+        via_factory = solvers.GmresSolver(A, restart=10, stop=STOP).solve(
+            jnp.asarray(b)
+        )
+    assert int(via_fn.iterations) == int(via_factory.iterations)
+    np.testing.assert_allclose(
+        np.asarray(via_fn.x), np.asarray(via_factory.x), atol=1e-6
+    )

@@ -158,10 +158,16 @@ def test_transpose_distributes_over_combinators():
         )
 
 
-def test_transpose_unsupported_format_raises():
+def test_transpose_unsupported_operator_raises():
+    # every stored format is transposable now (via the CSR hub); only truly
+    # matrix-free operators have no transpose to offer
     a, _, _ = spd_system(16)
-    with pytest.raises(NotImplementedError, match="not transposable"):
-        Transpose(sparse.ell_from_dense(a))
+    rng = np.random.default_rng(2)
+    v = rng.normal(size=16).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(Transpose(sparse.ell_from_dense(a))(jnp.asarray(v))),
+        a.T @ v, rtol=1e-4, atol=1e-4,
+    )
     with pytest.raises(NotImplementedError, match="not transposable"):
         Transpose(MatrixFreeOp(lambda v: v, shape=(16, 16)))
 

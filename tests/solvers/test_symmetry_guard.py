@@ -1,0 +1,116 @@
+"""CG-family symmetry guard: loud failure on nonsymmetric operands.
+
+``cg``/``fcg`` silently produce garbage on nonsymmetric systems (the Lanczos
+three-term recurrence assumes A = A^T).  The seeded probe turns that into a
+clear error at generation/solve time, with ``strict=False`` as the escape
+hatch.  The probe is host-side numpy — it must leave **zero** footprint in
+the executor dispatch log, or it would shift every launch-count pin.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import sparse, solvers
+from repro.core import make_executor
+from repro.solvers.common import probe_symmetry
+from repro.solvers.krylov import (
+    BicgstabSolver,
+    CgSolver,
+    FcgSolver,
+    GmresSolver,
+    PipelinedCgSolver,
+)
+from repro.sparse.gallery import convection_diffusion_2d, poisson_2d
+
+
+def _gallery_csr(host):
+    indptr, indices, values, shape = host
+    return sparse.csr_from_arrays(indptr, indices, values, shape)
+
+
+NONSYM = _gallery_csr(convection_diffusion_2d(10, peclet=5.0))
+SPD = _gallery_csr(poisson_2d(10))
+B = jnp.ones(100, jnp.float32)
+
+
+def test_probe_classifies_gallery_matrices():
+    assert probe_symmetry(NONSYM) is False
+    assert probe_symmetry(SPD) is True
+
+
+def test_probe_undecidable_cases_return_none():
+    rect = sparse.csr_from_dense(np.ones((3, 5), np.float32))
+    assert probe_symmetry(rect) is None
+    assert probe_symmetry(object()) is None
+
+
+@pytest.mark.parametrize("fn", [solvers.cg, solvers.fcg])
+def test_cg_family_raises_on_convection_diffusion(fn):
+    with pytest.raises(ValueError, match="symmetry probe"):
+        fn(NONSYM, B)
+
+
+@pytest.mark.parametrize("fn", [solvers.cg, solvers.fcg])
+def test_error_names_the_safe_alternatives(fn):
+    with pytest.raises(ValueError, match="gmres, bicgstab, or cgs"):
+        fn(NONSYM, B)
+
+
+@pytest.mark.parametrize("fn", [solvers.cg, solvers.fcg])
+def test_strict_false_escape_hatch(fn):
+    res = fn(NONSYM, B, strict=False)  # runs; result quality not claimed
+    assert res.x.shape == B.shape
+
+
+@pytest.mark.parametrize("cls", [CgSolver, PipelinedCgSolver, FcgSolver])
+def test_factories_raise_at_generation_time(cls):
+    with pytest.raises(ValueError, match="symmetry probe"):
+        cls(NONSYM)
+    cls(NONSYM, strict=False)  # escape hatch at generation
+    cls(SPD)  # SPD operand generates cleanly
+
+
+@pytest.mark.parametrize("cls", [BicgstabSolver, GmresSolver])
+def test_nonsym_solvers_accept_nonsymmetric_operands(cls):
+    res = cls(NONSYM).solve(B)
+    assert bool(res.converged)
+
+
+def test_spd_path_unaffected():
+    res = solvers.cg(SPD, B)
+    assert bool(res.converged)
+
+
+def test_probe_skips_traced_values_under_jit():
+    """Inside jit the values are tracers: the probe must pass (None), never
+    raise or force a host sync."""
+
+    @jax.jit
+    def solve(values, b):
+        A = sparse.Csr(values=values, indices=NONSYM.indices,
+                       indptr=NONSYM.indptr, shape=NONSYM.shape)
+        return solvers.gmres(A, b).x
+
+    out = solve(NONSYM.values, B)  # gmres: no guard, traced path exercised
+    assert out.shape == B.shape
+
+    @jax.jit
+    def solve_cg(values, b):
+        A = sparse.Csr(values=values, indices=SPD.indices,
+                       indptr=SPD.indptr, shape=SPD.shape)
+        return solvers.cg(A, b).x  # guard must no-op on traced values
+
+    out = solve_cg(SPD.values, B)
+    assert out.shape == B.shape
+
+
+def test_probe_leaves_no_dispatch_footprint():
+    """Launch-count pins (BENCH, fused-loop tests) diff the dispatch log
+    exactly — the probe must not add a single entry."""
+    ex = make_executor("xla")
+    ex.dispatch_log.clear()
+    assert probe_symmetry(SPD) is True
+    assert probe_symmetry(NONSYM) is False
+    assert sum(ex.dispatch_log.values()) == 0

@@ -75,3 +75,81 @@ def test_spd_banded_deterministic_pattern():
     b = spd_banded(24, BANDED_OFFSETS[0], 0.3, np.random.default_rng(7))
     for x, y in zip(a[:3], b[:3]):
         np.testing.assert_array_equal(x, y)
+
+
+# -- PR-10 corpus: convection-diffusion + power-law Laplacians ----------------
+
+def test_convection_diffusion_is_nonsymmetric_and_scales_with_peclet():
+    from repro.sparse.gallery import convection_diffusion_2d
+
+    asym = {}
+    for pe in (0.1, 1.5, 10.0):
+        indptr, indices, values, shape = convection_diffusion_2d(8, peclet=pe)
+        _check_csr(indptr, indices, values, shape)
+        a = _to_dense(indptr, indices, values, shape)
+        asym[pe] = np.linalg.norm(a - a.T)
+        assert asym[pe] > 0, f"Pe={pe}: matrix is symmetric"
+    assert asym[0.1] < asym[1.5] < asym[10.0], (
+        f"asymmetry must grow with Péclet: {asym}"
+    )
+
+
+@pytest.mark.parametrize("scheme", ["upwind", "centered"])
+def test_convection_diffusion_eigenvalues_in_right_half_plane(scheme):
+    """Both discretizations must stay nonsingular/convergent-friendly: every
+    eigenvalue has positive real part (upwind additionally keeps an
+    M-matrix-style dominant diagonal)."""
+    from repro.sparse.gallery import convection_diffusion_2d
+
+    indptr, indices, values, shape = convection_diffusion_2d(
+        8, peclet=5.0, scheme=scheme
+    )
+    a = _to_dense(indptr, indices, values, shape).astype(np.float64)
+    w = np.linalg.eigvals(a)
+    assert w.real.min() > 0, f"{scheme}: eigenvalue with Re <= 0"
+
+
+def test_convection_diffusion_rejects_unknown_scheme():
+    from repro.sparse.gallery import convection_diffusion_2d
+
+    with pytest.raises(ValueError):
+        convection_diffusion_2d(4, scheme="quick")
+
+
+def test_power_law_laplacian_spd_and_heavy_tailed():
+    from repro.sparse.gallery import power_law_laplacian
+
+    indptr, indices, values, shape = power_law_laplacian(200, shift=1e-2, seed=0)
+    _check_csr(indptr, indices, values, shape)
+    a = _to_dense(indptr, indices, values, shape).astype(np.float64)
+    np.testing.assert_allclose(a, a.T, atol=1e-6)
+    w = np.linalg.eigvalsh(a)
+    # shifted graph Laplacian: SPD with smallest eigenvalue ~= shift
+    assert w.min() > 0
+    np.testing.assert_allclose(w.min(), 1e-2, rtol=0.2)
+    # degree spread: the power-law tail must produce hubs well above the
+    # typical degree (a uniform-degree graph would fail this)
+    deg = np.diff(indptr) - 1  # minus the diagonal entry
+    assert deg.max() >= 4 * max(int(np.median(deg)), 1), (
+        f"no heavy tail: max degree {deg.max()}, median {np.median(deg)}"
+    )
+
+
+def test_power_law_laplacian_deterministic_per_seed():
+    from repro.sparse.gallery import power_law_laplacian
+
+    a = power_law_laplacian(100, seed=3)
+    b = power_law_laplacian(100, seed=3)
+    for x, y in zip(a[:3], b[:3]):
+        np.testing.assert_array_equal(x, y)
+    c = power_law_laplacian(100, seed=4)
+    assert not np.array_equal(a[1], c[1])
+
+
+def test_power_law_laplacian_row_sums_equal_shift():
+    """L = D - A + shift*I: every row sums to shift (f32 accumulation)."""
+    from repro.sparse.gallery import power_law_laplacian
+
+    indptr, indices, values, shape = power_law_laplacian(150, shift=0.5, seed=1)
+    a = _to_dense(indptr, indices, values, shape)
+    np.testing.assert_allclose(a.sum(axis=1), 0.5, atol=1e-4)

@@ -1,0 +1,142 @@
+"""Transpose conformance: every format, degenerate rows, executor threading.
+
+``Transpose(A).apply(x)`` must equal dense ``A.T @ x`` for every storage
+format — including matrices with empty rows (which become empty *columns*
+under transpose and vice versa), the degenerate the ELL/SELL-P padding paths
+historically mishandled.  The executor-threading pin guards the implicit
+layer's backward pass: the transposed operator must dispatch through the same
+``Executor.launch_config`` path (same dispatch log) as the forward operator.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro import sparse
+from repro.core import Composition, make_executor
+from repro.core.linop import Transpose
+from repro.solvers.common import ScalarJacobi
+
+FORMATS = ("coo", "csr", "ell", "sellp", "dense")
+
+BUILD = {
+    "coo": sparse.coo_from_dense,
+    "csr": sparse.csr_from_dense,
+    "ell": sparse.ell_from_dense,
+    "sellp": sparse.sellp_from_dense,
+    "dense": lambda a: sparse.Dense(jnp.asarray(a)),
+}
+
+
+def _pattern(m, n, density, seed, empty_rows=0, empty_cols=0):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, n)).astype(np.float32)
+    mask = rng.random((m, n)) < density
+    a = np.where(mask, a, 0.0)
+    for i in rng.choice(m, size=min(empty_rows, m), replace=False):
+        a[i, :] = 0.0
+    for j in rng.choice(n, size=min(empty_cols, n), replace=False):
+        a[:, j] = 0.0
+    return a
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@settings(max_examples=8)
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(1, 40),
+    density=st.floats(0.02, 0.9),
+    seed=st.integers(0, 10_000),
+    empty_rows=st.integers(0, 3),
+    empty_cols=st.integers(0, 3),
+)
+def test_transpose_matches_dense(fmt, m, n, density, seed, empty_rows,
+                                 empty_cols):
+    a = _pattern(m, n, density, seed, empty_rows, empty_cols)
+    x = np.random.default_rng(seed + 1).normal(size=m).astype(np.float32)
+    A = BUILD[fmt](a)
+    got = np.asarray(Transpose(A).apply(jnp.asarray(x)))
+    np.testing.assert_allclose(got, a.T @ x, rtol=1e-4, atol=1e-5,
+                               err_msg=f"Transpose({fmt}) != dense A.T @ x")
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_transpose_preserves_format(fmt):
+    a = _pattern(9, 7, 0.4, 0)
+    A = BUILD[fmt](a)
+    At = A.transpose()
+    assert type(At) is type(A), f"{fmt}: transpose changed format to {type(At)}"
+    assert At.shape == (7, 9)
+
+
+def test_transpose_all_zero_matrix():
+    a = np.zeros((5, 3), np.float32)
+    x = np.ones(5, np.float32)
+    for fmt in FORMATS:
+        got = np.asarray(Transpose(BUILD[fmt](a)).apply(jnp.asarray(x)))
+        np.testing.assert_array_equal(got, np.zeros(3, np.float32))
+
+
+def test_sellp_transpose_keeps_slice_geometry():
+    a = _pattern(20, 20, 0.3, 2)
+    A = sparse.sellp_from_dense(a)
+    At = A.transpose()
+    assert At.slice_size == A.slice_size
+    assert At.stride_factor == A.stride_factor
+
+
+def test_csr_transpose_traced_values_under_jit():
+    """Pattern-static differentiable transpose: structure stays host-side
+    concrete while values are traced (the implicit-layer backward)."""
+    import jax
+
+    a = _pattern(12, 12, 0.4, 3)
+    A = sparse.csr_from_dense(a)
+    x = jnp.asarray(np.random.default_rng(4).normal(size=12).astype(np.float32))
+
+    @jax.jit
+    def f(values, xv):
+        B = sparse.Csr(values=values, indices=A.indices, indptr=A.indptr,
+                       shape=A.shape)
+        return Transpose(B).apply(xv)
+
+    got = np.asarray(f(A.values, x))
+    np.testing.assert_allclose(got, a.T @ np.asarray(x), rtol=1e-4, atol=1e-5)
+
+
+def test_transpose_inherits_executor_and_dispatch_path():
+    """Satellite pin: ``Transpose(Composition(...))`` must dispatch through
+    the *same* executor as the forward operator — the backward solve of the
+    implicit layer relies on forward/adjoint landing in one kernel space."""
+    a = _pattern(10, 10, 0.5, 5)
+    ex = make_executor("reference")
+    A = sparse.csr_from_dense(a)
+    M = ScalarJacobi(jnp.ones(10, jnp.float32) * 0.5)
+    comp = Composition(M, A, executor=ex)
+    t = Transpose(comp)
+    assert t.executor is ex, "Transpose dropped the composed operator's executor"
+
+    x = jnp.asarray(np.random.default_rng(6).normal(size=10).astype(np.float32))
+    ex.dispatch_log.clear()
+    comp.apply(x)
+    fwd_log = dict(ex.dispatch_log)
+    ex.dispatch_log.clear()
+    t.apply(x)
+    bwd_log = dict(ex.dispatch_log)
+    assert sum(fwd_log.values()) > 0, "forward apply dispatched nothing"
+    assert bwd_log.keys() == fwd_log.keys(), (
+        f"transpose dispatched {sorted(bwd_log)} but forward dispatched "
+        f"{sorted(fwd_log)} — executor threading lost"
+    )
+    assert bwd_log == fwd_log
+
+    # explicit executor= still wins over inheritance
+    ex2 = make_executor("reference")
+    assert Transpose(comp, executor=ex2).executor is ex2
+
+    # numerics: the composed transpose equals the dense adjoint
+    dense = 0.5 * a  # Composition(M, A) = M @ A with M = 0.5 I
+    got = np.asarray(t.apply(x))
+    np.testing.assert_allclose(got, dense.T @ np.asarray(x), rtol=1e-4,
+                               atol=1e-5)
